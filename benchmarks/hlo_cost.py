@@ -1,0 +1,292 @@
+"""Loop-aware HLO cost analyzer.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, which
+makes it useless for scanned-layer models (a 62-layer scan reports 1
+layer of FLOPs).  This module re-derives
+
+    flops              (dot: 2*M*N*K; elementwise/reduce: n_elems)
+    hbm_bytes          (sum of operand+result bytes of fusions/dots/
+                        convs/copies/gathers/scatters — post-fusion, so a
+                        reasonable proxy for HBM traffic)
+    collective_bytes   (output bytes of all-gather/all-reduce/
+                        reduce-scatter/all-to-all/collective-permute,
+                        by kind)
+
+from the OPTIMIZED HLO text, multiplying every computation by the product
+of trip counts of the while-loops it is reached through.
+
+Trip counts: jax.lax.scan lowers to a while whose condition compares the
+induction variable against a constant K with direction=LT — we parse K
+from the condition computation.  Unknown conditions default to 1 (warned).
+"""
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for v in dims.split(","):
+            if v:
+                n *= int(v)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for v in m.group(2).split(","):
+        if v:
+            n *= int(v)
+    return n
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.flops = 0.0
+        self.hbm = 0.0
+        self.coll: Dict[str, float] = defaultdict(float)
+        self.calls: List[Tuple[str, str]] = []  # (kind, callee)
+        self.while_pairs: List[Tuple[str, str]] = []  # (cond, body)
+        self.trip_const: Optional[int] = None  # if this is a condition comp
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line[0] not in " \t" and line.rstrip().endswith("{") \
+                and ") -> " in line:
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                cur = Computation(hdr.group(2))
+                comps[cur.name] = cur
+                if hdr.group(1):
+                    entry = cur.name
+                continue
+        if cur is None or not line.strip() or line.strip() == "}":
+            continue
+        cur.lines.append(line)
+    for comp in comps.values():
+        _analyze(comp)
+    comps["__entry__"] = comps[entry] if entry else next(iter(comps.values()))
+    return comps
+
+
+# %name = TYPE op(args), attrs      (scheduled HLO: operands by name only)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{}]+)\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_ELEMENTWISE = frozenset((
+    "add", "multiply", "subtract", "divide", "exponential", "tanh",
+    "rsqrt", "sqrt", "log", "maximum", "minimum", "power", "select",
+    "compare", "and", "or", "xor", "negate", "abs", "floor", "ceil",
+    "sign", "cosine", "sine", "logistic", "exponential-minus-one",
+    "convert", "clamp"))
+
+_HBM_OPS = frozenset((
+    "copy", "copy-start", "gather", "scatter",
+    "dynamic-slice", "concatenate", "transpose", "reduce", "sort", "pad",
+    "reverse", "select-and-scatter"))
+
+
+def _analyze(comp: Computation):
+    symbols: Dict[str, str] = {}
+    parsed = []
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        symbols[name] = rtype
+        parsed.append((name, rtype, op, rest, line))
+
+    def operand_types(rest: str):
+        # operand list ends at the first top-level ')'
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    rest = rest[:i]
+                    break
+                depth -= 1
+        return [symbols.get(nm, "") for nm in _OPERAND_RE.findall(rest)]
+
+    for name, rtype, op, rest, line in parsed:
+        if op == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", line)
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            if cm and bm:
+                comp.while_pairs.append((cm.group(1), bm.group(1)))
+            continue
+        tm = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", line)
+        if tm:
+            comp.calls.append(("call", tm.group(1)))
+        if op == "conditional":
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        comp.calls.append(("branch", b))
+        # trip-count pattern: s32 constant in a while-condition computation
+        if op == "constant" and re.match(r"s32\[\]", rtype):
+            cm = re.search(r"constant\((\d+)\)", line)
+            if cm:
+                v = int(cm.group(1))
+                comp.trip_const = max(comp.trip_const or 0, v)
+        # ---- costs ----
+        if op == "dot":
+            out_elems = _result_elems(rtype)
+            otypes = operand_types(rest)
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            k = 1
+            if otypes and cdims:
+                lhs_m = _SHAPE_RE.search(otypes[0] or "")
+                if lhs_m:
+                    dims = [int(v) for v in lhs_m.group(2).split(",") if v]
+                    for ci in cdims.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            comp.flops += 2.0 * out_elems * k
+            comp.hbm += _shape_bytes(rtype) + sum(
+                _shape_bytes(t) for t in otypes)
+        elif op == "convolution":
+            out_elems = _result_elems(rtype)
+            otypes = operand_types(rest)
+            k = 1
+            if len(otypes) > 1:
+                km = _SHAPE_RE.search(otypes[1] or "")
+                if km:
+                    dims = [int(v) for v in km.group(2).split(",") if v]
+                    # kernel spatial x in-features
+                    out_m = _SHAPE_RE.search(rtype)
+                    if out_m and dims:
+                        k = max(1, int(np_prod(dims) //
+                                       max(dims[-1], 1)))
+            comp.flops += 2.0 * out_elems * k
+            comp.hbm += _shape_bytes(rtype) + sum(
+                _shape_bytes(t) for t in otypes)
+        elif op == "fusion":
+            otypes = operand_types(rest)
+            total = _shape_bytes(rtype) + sum(_shape_bytes(t)
+                                              for t in otypes)
+            # In-place-update pattern (e.g. fused dynamic-update-slice of a
+            # loop carry): an operand with the exact result type aliases
+            # the output buffer — count the pair once, not twice.
+            r_clean = re.sub(r"\{[^}]*\}", "", rtype).strip()
+            for t in otypes:
+                if re.sub(r"\{[^}]*\}", "", t).strip() == r_clean \
+                        and _shape_bytes(t) > 0:
+                    total -= _shape_bytes(t)
+                    break
+            comp.hbm += total
+        elif op == "dynamic-update-slice":
+            # in-place region update: traffic ~ 2x the UPDATE operand,
+            # not the full (aliased) result buffer
+            otypes = operand_types(rest)
+            upd = otypes[1] if len(otypes) > 1 else rtype
+            comp.hbm += 2 * _shape_bytes(upd)
+        elif op in _HBM_OPS:
+            comp.hbm += _shape_bytes(rtype)
+        for kind in COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                comp.coll[kind] += _shape_bytes(rtype)
+                break
+        if op in _ELEMENTWISE:
+            comp.flops += _result_elems(rtype)
+
+
+def np_prod(xs):
+    n = 1
+    for v in xs:
+        n *= v
+    return n
+
+
+def total_costs(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    entry = comps["__entry__"]
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def walk(name: str, depth=0) -> Tuple[float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return (0.0, 0.0, {})
+        fl, hb = comp.flops, comp.hbm
+        coll = dict(comp.coll)
+        for _, callee in comp.calls:
+            f2, h2, c2 = walk(callee, depth + 1)
+            fl += f2
+            hb += h2
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0) + v
+        for cond, body in comp.while_pairs:
+            trips = comps[cond].trip_const if (
+                cond in comps and comps[cond].trip_const) else 1
+            f2, h2, c2 = walk(body, depth + 1)
+            fc, hc, cc = walk(cond, depth + 1)
+            fl += trips * (f2 + fc)
+            hb += trips * (h2 + hc)
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0) + trips * v
+        memo[name] = (fl, hb, coll)
+        return memo[name]
+
+    fl, hb, coll = walk(entry.name)
+    return {
+        "flops": fl,
+        "hbm_bytes": hb,
+        "collective_bytes": coll,
+        "collective_total": sum(coll.values()),
+    }
+
+
+def load(path: str) -> str:
+    if path.endswith(".gz"):
+        with gzip.open(path, "rt") as f:
+            return f.read()
+    with open(path) as f:
+        return f.read()
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        c = total_costs(load(p))
+        print(p, {k: (f"{v:.3e}" if isinstance(v, float) else v)
+                  for k, v in c.items() if k != "collective_bytes"})

@@ -1,0 +1,192 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md section 'Roofline').
+
+For every (arch x shape x mesh) cell:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+  memory     = HLO_bytes_per_device / HBM_bandwidth       [s]
+  collective = collective_bytes_per_device / link_bw      [s]
+
+HLO_* come from benchmarks/hlo_cost.py (loop-aware parse of the SPMD-
+partitioned module, so all quantities are already per-device).
+MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE train) /
+2*N_active*tokens (decode/prefill), divided by the chip count.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 (394 int8),
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Optional
+
+from . import hlo_cost
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one new token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: Dict, chips: int) -> float:
+    """Per-device useful FLOPs for this cell."""
+    n_act = rec["active_param_count"]
+    shape = rec["shape"]
+    toks = SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        total = 6.0 * n_act * toks
+    else:  # forward-only
+        total = 2.0 * n_act * toks
+    return total / chips
+
+
+def _cfg_of(rec: Dict):
+    """Config + distribution hints for a cell (as the dry-run set them)."""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.configs import registry as reg
+    cfg = reg.get_config(rec["arch"])
+    seq_shard = False
+    if rec["shape"] == "train_4k":
+        from repro.launch import dryrun as dr
+        seq_shard = rec["arch"] in dr.SEQ_SHARD_TRAIN
+    return cfg, seq_shard
+
+
+def _toks_dev(rec: Dict, chips: int, seq_shard: bool) -> float:
+    """Residual-stream tokens materialized per device: tokens shard over
+    the data axes; activations replicate over 'model' (16) unless the
+    residual is sequence-sharded (Megatron-SP)."""
+    model_size = 16
+    toks = SHAPE_TOKENS[rec["shape"]] / chips * model_size
+    if seq_shard:
+        toks /= model_size
+    return toks
+
+
+# Activation-traffic model (bytes/device).  The CPU-backend HLO cannot
+# stand in for TPU fusion behaviour, so the MEMORY term is analytic and
+# the parsed-HLO bytes are kept as a diagnostic only:
+#   per token per layer ~ dtype * RW * (4*d + 2*ff_eff)
+#     ff_eff: dense d_ff | moe k*d_ff*1.25 | mamba 2*d_inner | rwkv d_ff+4d
+#     RW = 2 (write+read); x1.5 under remat (recompute re-writes)
+#   train multiplies by 3 (fwd + bwd reads + dact writes).
+def _act_bytes(rec: Dict, chips: int, cfg, seq_shard: bool) -> float:
+    d, L, ff = cfg.d_model, cfg.n_layers, cfg.d_ff
+    if cfg.n_experts:
+        ff_eff = cfg.experts_per_token * ff * 1.25
+    elif cfg.family in ("hybrid", "ssm") and not cfg.rwkv:
+        ff_eff = 2 * cfg.ssm_expand * d
+    elif cfg.rwkv:
+        ff_eff = ff + 4 * d
+    else:
+        ff_eff = ff
+    rw = 2.0 * (1.5 if cfg.remat == "full" else 1.0)
+    total = _toks_dev(rec, chips, seq_shard) * L * 2.0 * rw * (
+        4 * d + 2 * ff_eff)
+    if rec["shape"] == "train_4k":
+        total *= 3.0
+    return total
+
+
+def analyze_cell(json_path: str) -> Optional[Dict]:
+    rec = json.load(open(json_path))
+    hlo_path = json_path.replace(".json", ".hlo.txt.gz")
+    if not os.path.exists(hlo_path):
+        return None
+    costs = hlo_cost.total_costs(hlo_cost.load(hlo_path))
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    cfg, seq_shard = _cfg_of(rec)
+    arg_b = rec["memory"]["argument_bytes"]
+    out_b = rec["memory"]["output_bytes"]
+    act_b = _act_bytes(rec, chips, cfg, seq_shard)
+
+    t_compute = costs["flops"] / PEAK_FLOPS
+    t_memory = (arg_b + out_b + act_b) / HBM_BW
+    t_coll = costs["collective_total"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec, chips)
+    bound = max(terms.values())
+
+    # Ideal times given the algorithm: compute at peak; memory = params
+    # (+opt for train, +cache for decode) read/written once + one
+    # residual-stream pass per layer.
+    ideal_mem = arg_b + out_b
+    ideal_mem += _toks_dev(rec, chips, seq_shard) * cfg.n_layers * 4 * \
+        cfg.d_model * (3 if rec["shape"] == "train_4k" else 1)
+    t_ideal = max(mf / PEAK_FLOPS, ideal_mem / HBM_BW)
+    return {
+        **rec,
+        "hlo_flops": costs["flops"],
+        "hlo_bytes_diag": costs["hbm_bytes"],
+        "coll_bytes": costs["collective_total"],
+        "coll_breakdown": costs["collective_bytes"],
+        "arg_bytes": arg_b,
+        "act_bytes": act_b,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / costs["flops"] if costs["flops"] else 0.0,
+        "t_ideal": t_ideal,
+        # score: how close the modeled bound is to the algorithmic ideal
+        "roofline_frac": t_ideal / bound if bound else 0.0,
+    }
+
+
+def fmt_row(a: Dict) -> str:
+    return ("| {arch} | {shape} | {mesh} | {q} | {tc:.2e} | {tm:.2e} | "
+            "{tl:.2e} | {dom} | {ur:.2f} | {rf:.1%} |").format(
+        arch=a["arch"], shape=a["shape"], mesh=a["mesh"],
+        q=a.get("quant", "none"),
+        tc=a["t_compute"], tm=a["t_memory"], tl=a["t_collective"],
+        dom=a["dominant"], ur=a["useful_ratio"], rf=a["roofline_frac"])
+
+
+HEADER = ("| arch | shape | mesh | quant | compute [s] | memory [s] | "
+          "collective [s] | bound | MODEL/HLO | roofline |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    rows = []
+    for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        try:
+            a = analyze_cell(p)
+        except Exception as e:
+            print(f"[warn] {p}: {e}", file=sys.stderr)
+            continue
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda a: (a["mesh"], a["arch"], a["shape"]))
+    print(HEADER)
+    for a in rows:
+        print(fmt_row(a))
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=2, default=str)
+    # summary
+    from collections import Counter
+    doms = Counter(a["dominant"] for a in rows)
+    print(f"\ncells: {len(rows)}  dominant-term histogram: {dict(doms)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.  `derived` carries the
+figure-level quantity being reproduced (NMSE gap in bits, area/power
+ratios, BER deltas, muting rates ...) so each row maps 1:1 onto a claim
+in the paper; EXPERIMENTS.md quotes these rows.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FXPFormat, VPFormat, vp_quantize, cost_model as cm
+from repro.core.param_search import search_exponent_list, vp_nmse
+from repro.kernels import ops, ref
+from repro.mimo import ChannelConfig, table1_specs, cspade
+from repro.mimo.sim import (
+    make_ensemble, pdf_stats, nmse_vs_bitwidth, bitwidth_gap,
+    ber_float, ber_quantized, calibrate_specs,
+)
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _timeit(fn, n=3):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def fig7_pdf_stats(n_ch: int):
+    """Fig. 7: spiky beamspace PDFs (kurtosis/PAPR of re parts)."""
+    t0 = time.perf_counter()
+    ens = make_ensemble(jax.random.PRNGKey(0), ChannelConfig(), n_ch, 20.0)
+    us = (time.perf_counter() - t0) * 1e6
+    k = {name: pdf_stats(x)["kurtosis"] for name, x in
+         [("ybar", ens.y_ant), ("y", ens.y_beam),
+          ("Wbar", ens.w_ant), ("W", ens.w_beam)]}
+    emit("fig7_pdf_kurtosis", us,
+         f"ybar={k['ybar']:.1f};y={k['y']:.1f};"
+         f"Wbar={k['Wbar']:.1f};W={k['W']:.1f} (beamspace spikier)")
+    return ens
+
+
+def fig8_nmse(ens):
+    """Fig. 8: NMSE vs bitwidth; paper: beamspace needs ~1.2 extra bits."""
+    t0 = time.perf_counter()
+    nm = nmse_vs_bitwidth(ens)
+    us = (time.perf_counter() - t0) * 1e6
+    gap = bitwidth_gap(nm)
+    pts = ";".join(f"W{w}:a={nm['antenna'][w]:.1e},b={nm['beamspace'][w]:.1e}"
+                   for w in sorted(nm["antenna"]))
+    emit("fig8_nmse_bit_gap", us, f"gap={gap:.2f}bits(paper~1.2);{pts}")
+
+
+def tab1_ber(n_ch: int):
+    """Table I: BER of A-FXP/B-FXP/B-VP vs float LMMSE (no visible gap)."""
+    t0 = time.perf_counter()
+    ens = make_ensemble(jax.random.PRNGKey(7), ChannelConfig(), n_ch, 2.0)
+    specs = calibrate_specs(table1_specs(), ens)
+    ref_a, ref_b = ber_float(ens, False), ber_float(ens, True)
+    rows = []
+    for s in specs:
+        b = ber_quantized(ens, s)
+        r = ref_b if s.beamspace else ref_a
+        rows.append(f"{s.name}={b:.4f}(float={r:.4f})")
+    us = (time.perf_counter() - t0) * 1e6
+    emit("tab1_ber_snr2db", us, ";".join(rows))
+
+
+def tab1_param_search(ens):
+    """Sec. II-D: Monte-Carlo exponent-list search recovers a Table-I-class
+    format for the beamspace W signal."""
+    w = np.asarray(ens.w_beam.real).ravel()[:200000]
+    w = w / np.abs(w).max()
+    fxp = FXPFormat(12, 11)
+    t0 = time.perf_counter()
+    fmt, err = search_exponent_list(w, fxp, M=7, E=2)
+    us = (time.perf_counter() - t0) * 1e6
+    base = vp_nmse(w, fxp, VPFormat(7, (11, 9, 7, 6)))
+    emit("sec2d_param_search", us,
+         f"found=VP(7,{list(fmt.f)}) nmse={err:.2e}; "
+         f"paper_list=[11,9,7,6] nmse={base:.2e}")
+
+
+def fig11_area():
+    """Fig. 11a: area breakdown + ratios (paper: B-VP ~0.8x B-FXP)."""
+    t0 = time.perf_counter()
+    designs = cm.paper_designs()
+    areas = {k: cm.mvm_area(s) for k, s in designs.items()}
+    tot = {k: cm.total(v) for k, v in areas.items()}
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig11a_area_ratios", us,
+         f"BFXP/AFXP={tot['B-FXP']/tot['A-FXP']:.3f}(paper~1.25);"
+         f"BVP/BFXP={tot['B-VP']/tot['B-FXP']:.3f}(paper~0.80);"
+         f"RMshare_BFXP={areas['B-FXP']['rm']/tot['B-FXP']:.2f}(paper0.66)")
+
+
+def fig11_power(ens):
+    """Fig. 11b/c: power with LoS / non-LoS stimuli-derived muting rates."""
+    t0 = time.perf_counter()
+    designs = cm.paper_designs()
+    # muting rates measured on our channel ensembles at calibrated thresholds
+    tw, ty = cspade.calibrate_thresholds(
+        ens.w_beam, ens.y_beam, target_rate=0.5)
+    mut_los = float(cspade.muting_rate(ens.w_beam, ens.y_beam, tw, ty))
+    ens_n = make_ensemble(jax.random.PRNGKey(3),
+                          ChannelConfig(los=False), 400, 20.0)
+    mut_nlos = float(cspade.muting_rate(ens_n.w_beam, ens_n.y_beam, tw, ty))
+    out = []
+    for name, mut in (("LoS", mut_los), ("nonLoS", mut_nlos)):
+        p = {k: sum(cm.mvm_power(s, muting_rate=mut).values())
+             for k, s in designs.items()}
+        out.append(f"{name}:mut={mut:.2f},BVP/BFXP={p['B-VP']/p['B-FXP']:.3f}")
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig11bc_power_ratios", us,
+         ";".join(out) + "(paper 0.86-0.90)")
+
+
+def sec5b_flp():
+    """Sec. V-B: custom-FLP CMAC array vs VP CMAC array (paper: 3.4x)."""
+    t0 = time.perf_counter()
+    designs = cm.paper_designs()
+    vp_a = cm.vp_cmac_array_area(designs["B-VP"])
+    flp_a = cm.flp_cmac_array_area(8)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("sec5b_flp_vs_vp_area", us,
+         f"FLP/VP={flp_a/vp_a:.2f}(paper3.4; unit-gate model recovers the "
+         "multiplier+adder structure; remainder is timing-driven synthesis)")
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenches (CPU interpret mode — correctness-path timing only)
+# ---------------------------------------------------------------------------
+
+def kernel_bench():
+    y_fxp, y_vp = FXPFormat(9, 1), VPFormat(7, (1, -1))
+    w_fxp, w_vp = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_t(2, (512, 512)).clip(-8, 8) * 10,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_t(2, (512, 512)).clip(-8, 8) * 0.01,
+                    jnp.float32)
+    ta = vp_quantize(a, y_fxp, y_vp)
+    tb = vp_quantize(b, w_fxp, w_vp)
+
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.vp_quant(a, y_fxp, y_vp, interpret=True)))
+    emit("kernel_vp_quant_512x512_interp", us, "bit-exact vs ref (tests)")
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.vp_matmul(ta.m, ta.i, tb.m, tb.i, y_vp, w_vp, interpret=True)))
+    # NMSE of the full VP pipeline vs float matmul
+    out = np.asarray(ref.vp_matmul_ref(ta.m, ta.i, tb.m, tb.i, y_vp, w_vp))
+    want = np.asarray(a) @ np.asarray(b)
+    nmse = float(np.mean((out - want) ** 2) / np.mean(want**2))
+    emit("kernel_vp_matmul_512_interp", us, f"nmse_vs_float={nmse:.1e}")
+
+    from repro.core import block_vp_quantize
+    am, ai = block_vp_quantize(a / 16, y_fxp, y_vp, block=256, axis=-1)
+    bm, bi = block_vp_quantize(b * 64, w_fxp, w_vp, block=256, axis=0)
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.block_vp_matmul(am, ai, bm, bi, y_vp, w_vp, bk=256,
+                            interpret=True)))
+    emit("kernel_block_vp_matmul_512_interp", us,
+         "int8-MXU path (beyond-paper)")
+
+
+def cspade_tile_stats(ens):
+    """Tile-level CSPADE muting on real beamspace stimuli (TPU adaptation).
+
+    Per realization: the equalization MVM W (U=8, B=64) x y (B,) tiled
+    (8 x 8) along the beam axis — beam sparsity makes whole k-tiles quiet
+    for W and y SIMULTANEOUSLY (same inactive beams), which is what the
+    kernel's tile-skip exploits."""
+    t0 = time.perf_counter()
+    w = np.asarray(ens.w_beam.real)      # (n, 8, 64)
+    y = np.asarray(ens.y_beam.real)      # (n, 64)
+    tw = np.quantile(np.abs(w), 0.9)
+    ty = np.quantile(np.abs(y), 0.9)
+    # scalar-granularity reference (the ASIC's per-product muting)
+    scalar = float(((np.abs(w) < tw)
+                    & (np.abs(y)[:, None, :] < ty)).mean())
+    rates = {}
+    for bk in (2, 4, 8, 16):
+        w_t = np.abs(w).reshape(w.shape[0], 8, 64 // bk, bk).max((1, 3))
+        y_t = np.abs(y).reshape(y.shape[0], 64 // bk, bk).max(-1)
+        rates[bk] = float(((w_t < tw) & (y_t < ty)).mean())
+    us = (time.perf_counter() - t0) * 1e6
+    emit("cspade_tile_muting_rate", us,
+         f"scalar={scalar:.2f};"
+         + ";".join(f"tile{bk}={r:.2f}" for bk, r in rates.items())
+         + " (granularity cost of the systolic tile-skip adaptation)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args, _ = ap.parse_known_args()
+    n_ch = 400 if args.fast else 2000
+    n_ber = 1000 if args.fast else 4000
+
+    print("name,us_per_call,derived")
+    ens = fig7_pdf_stats(n_ch)
+    fig8_nmse(ens)
+    tab1_ber(n_ber)
+    tab1_param_search(ens)
+    fig11_area()
+    fig11_power(ens)
+    sec5b_flp()
+    kernel_bench()
+    cspade_tile_stats(ens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""The paper's case study end to end: beamspace LMMSE equalization with the
+three MVM designs (A-FXP / B-FXP / B-VP) on simulated LoS mmWave channels.
+
+    PYTHONPATH=src python examples/mimo_equalizer.py [--n 2000]
+
+Reproduces, in one run: Fig. 7 (beamspace spikiness), Fig. 8 (NMSE bit
+gap), Table I BER validation, CSPADE muting rates, and the cost-model
+area/power ratios (Fig. 11).
+"""
+import argparse
+import jax
+
+from repro.mimo import ChannelConfig, table1_specs, cspade
+from repro.mimo.sim import (
+    make_ensemble, pdf_stats, nmse_vs_bitwidth, bitwidth_gap,
+    ber_float, ber_quantized, calibrate_specs,
+)
+from repro.core import cost_model as cm
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=2000)
+args = ap.parse_args()
+
+print("=== generating LoS mmWave ensemble (B=64, U=8, 16-QAM, 20dB) ===")
+ens = make_ensemble(jax.random.PRNGKey(0), ChannelConfig(), args.n, 20.0)
+for name, x in [("ybar", ens.y_ant), ("y", ens.y_beam),
+                ("Wbar", ens.w_ant), ("W", ens.w_beam)]:
+    s = pdf_stats(x)
+    print(f"  {name:5s} kurtosis={s['kurtosis']:7.1f}  papr={s['papr_db']:5.1f}dB")
+
+print("\n=== Fig. 8: NMSE vs bitwidth ===")
+nm = nmse_vs_bitwidth(ens)
+for w in sorted(nm["antenna"]):
+    print(f"  W={w}: antenna={nm['antenna'][w]:.2e}  beamspace={nm['beamspace'][w]:.2e}")
+print(f"  beamspace needs {bitwidth_gap(nm):.2f} extra bits (paper: ~1.2)")
+
+print("\n=== Table I BER validation (SNR 2 dB) ===")
+ens_lo = make_ensemble(jax.random.PRNGKey(7), ChannelConfig(), args.n, 2.0)
+specs = calibrate_specs(table1_specs(), ens_lo)
+print(f"  float LMMSE: {ber_float(ens_lo, True):.4f}")
+for s in specs:
+    print(f"  {s.name:6s}: {ber_quantized(ens_lo, s):.4f}  "
+          f"(y={s.y_fxp}{'/'+str(s.y_vp) if s.y_vp else ''}, "
+          f"W={s.w_fxp}{'/'+str(s.w_vp) if s.w_vp else ''})")
+
+print("\n=== CSPADE thresholds / muting ===")
+tw, ty = cspade.calibrate_thresholds(ens.w_beam, ens.y_beam, 0.5)
+print(f"  calibrated thresholds: tau_W={tw:.4f} tau_y={ty:.4f} "
+      f"-> muting={float(cspade.muting_rate(ens.w_beam, ens.y_beam, tw, ty)):.2f}")
+
+print("\n=== Fig. 11: cost model ===")
+designs = cm.paper_designs()
+tot = {k: cm.total(cm.mvm_area(s)) for k, s in designs.items()}
+print(f"  area  B-FXP/A-FXP = {tot['B-FXP']/tot['A-FXP']:.2f} (paper ~1.25)")
+print(f"  area  B-VP /B-FXP = {tot['B-VP']/tot['B-FXP']:.2f} (paper ~0.80)")
+p = {k: sum(cm.mvm_power(s, muting_rate=0.5).values())
+     for k, s in designs.items()}
+print(f"  power B-VP /B-FXP = {p['B-VP']/p['B-FXP']:.2f} (paper 0.86-0.90)")
+print(f"  FLP/VP CMAC array = {cm.flp_cmac_array_area(8)/cm.vp_cmac_array_area(designs['B-VP']):.2f} (paper 3.4)")

@@ -1,0 +1,128 @@
+"""Model configuration schema shared by all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How the VP technique is applied to the model's matmuls.
+
+    mode:
+      none      - bf16/f32 baseline (the paper's "FLP" analogue)
+      fxp       - plain int8 fixed-point weights (the FXP baseline)
+      vp        - paper-faithful per-element VP weights (int8 significand +
+                  2-bit index planes; dequant-on-load)
+      vp_block  - beyond-paper block-VP (shared index per weight block ->
+                  int8 MXU matmuls + LUT scales)
+    """
+    mode: str = "none"
+    M: int = 7
+    E: int = 2
+    W: int = 12                    # FXP proxy grid width
+    block: int = 256               # vp_block index granularity
+    quantize_kv_cache: bool = False  # VP-quantized KV cache (decode lever)
+    act_mode: str = "none"         # activation quantization (none | vp)
+
+    def __post_init__(self):
+        assert self.mode in ("none", "fxp", "vp", "vp_block"), self.mode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    # Attention pattern
+    sliding_window: Optional[int] = None      # SWA (mixtral)
+    local_global_period: int = 0              # gemma3: every Nth layer global
+    local_window: int = 1024                  # local-attention window
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    # RWKV6
+    rwkv: bool = False
+    # Hybrid (zamba2): one SHARED attention block applied every N ssm layers
+    shared_attn_period: int = 0
+    # Encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # VLM
+    n_patches: int = 0
+    # Numerics / training
+    dtype: str = "bfloat16"
+    quant: QuantConfig = QuantConfig()
+    remat: str = "none"            # none | full | dots  (act checkpointing)
+    loss_chunk: int = 1024         # chunked cross-entropy seq block
+    # Distribution hints (set by the launcher, not the arch files):
+    seq_shard: bool = False        # Megatron-style sequence-parallel
+                                   # residual stream over "model"
+    mesh_batch_axes: Tuple[str, ...] = ("data",)
+    mesh_axis_sizes: Tuple[Tuple[str, int], ...] = ()  # set by launcher
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND roofline accounting)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab
+        hd, nh, nkv = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = d * hd * nh + 2 * d * hd * nkv + hd * nh * d
+        mlp = 3 * d * dff
+        if self.n_experts:
+            mlp = self.n_experts * 3 * d * dff + d * self.n_experts
+        ssm = 0
+        if self.family in ("ssm", "hybrid") and not self.rwkv:
+            di, ns, nh_s = self.d_inner, self.ssm_state, self.ssm_nheads
+            ssm = d * (2 * di + 2 * ns + nh_s) + di * d + di  # in/out proj etc
+        if self.rwkv:
+            ssm = 6 * d * d + 2 * d * dff + d * dff  # R,K,V,G,O,decay + FFN
+        per_layer = 2 * d  # norms
+        if self.family == "ssm":
+            per_layer += ssm + (2 * d * dff + d * dff if self.rwkv else 0)
+            if self.rwkv:
+                per_layer = 2 * d + ssm
+        elif self.family == "hybrid":
+            per_layer += ssm
+        else:
+            per_layer += attn + mlp
+        total = self.n_layers * per_layer + 2 * v * d + d
+        if self.family == "hybrid" and self.shared_attn_period:
+            total += attn + 3 * d * dff  # the shared block (counted once)
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + mlp + 2 * d)
+            total += self.n_layers * (attn + 2 * d)  # cross attention
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, dff = self.d_model, self.d_ff
+        dense_mlp = self.n_experts * 3 * d * dff
+        active_mlp = self.experts_per_token * 3 * d * dff
+        return int(self.param_count() - self.n_layers * (dense_mlp - active_mlp))

@@ -1,0 +1,73 @@
+"""Architecture registry: exact assigned configs + reduced smoke variants.
+
+Every entry is from the assignment table (public literature; see inline
+source tags).  `get_config(name)` returns the FULL config (dry-run only —
+never allocated on CPU); `get_smoke_config(name)` returns a reduced
+same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .base import ModelConfig, QuantConfig
+from . import (
+    zamba2_7b, rwkv6_3b, whisper_tiny, qwen2_0_5b, qwen3_0_6b,
+    stablelm_12b, gemma3_27b, internvl2_1b, qwen3_moe_30b_a3b, mixtral_8x22b,
+)
+
+_MODULES = {
+    "zamba2-7b": zamba2_7b,
+    "rwkv6-3b": rwkv6_3b,
+    "whisper-tiny": whisper_tiny,
+    "qwen2-0.5b": qwen2_0_5b,
+    "qwen3-0.6b": qwen3_0_6b,
+    "stablelm-12b": stablelm_12b,
+    "gemma3-27b": gemma3_27b,
+    "internvl2-1b": internvl2_1b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "mixtral-8x22b": mixtral_8x22b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+# (arch, shape) cells where long_500k applies (sub-quadratic decode):
+LONG_CONTEXT_ARCHS = ("zamba2-7b", "rwkv6-3b", "mixtral-8x22b")
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def get_config(name: str, quant: Optional[QuantConfig] = None) -> ModelConfig:
+    cfg = _MODULES[name].CONFIG
+    if quant is not None:
+        cfg = dataclasses.replace(cfg, quant=quant)
+    return cfg
+
+
+def get_smoke_config(name: str, quant: Optional[QuantConfig] = None
+                     ) -> ModelConfig:
+    cfg = _MODULES[name].SMOKE
+    if quant is not None:
+        cfg = dataclasses.replace(cfg, quant=quant)
+    return cfg
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells.  long_500k only for sub-quadratic
+    archs (full-attention skips documented in DESIGN.md)."""
+    out = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                if include_skipped:
+                    out.append((arch, shape, "SKIP: full attention at 500k "
+                                "is not sub-quadratic"))
+                continue
+            out.append((arch, shape) if not include_skipped
+                       else (arch, shape, "run"))
+    return out

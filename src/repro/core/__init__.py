@@ -1,0 +1,44 @@
+"""Core VP number-format library (the paper's contribution, in JAX).
+
+Public API:
+  FXPFormat, VPFormat, product_format, default_vp_format
+  fxp_quantize, fxp_to_float
+  fxp2vp, vp2fxp, vp_to_float, float_to_vp
+  vp_mul, vp_mul_to_fxp, product_scale_lut
+  VPTensor, vp_quantize, vp_dequantize, vp_fake_quant, vp_fake_quant_ste
+  block_vp_quantize, block_vp_dequantize
+  param_search (module), cost_model (module)
+"""
+from .formats import FXPFormat, VPFormat, product_format, default_vp_format
+from .fxp import (
+    fxp_quantize,
+    fxp_to_float,
+    fxp_saturate,
+    fxp_quantize_value,
+    choose_fxp_fraction,
+)
+from .convert import fxp2vp, fxp2vp_bitwindow, vp2fxp, vp_to_float, float_to_vp
+from .vp_math import vp_mul, vp_mul_to_fxp, product_scale_lut
+from .vp_tensor import VPTensor, pack_indices, unpack_indices, significand_dtype
+from .quantize import (
+    vp_quantize,
+    vp_dequantize,
+    vp_fake_quant,
+    vp_fake_quant_ste,
+    block_vp_quantize,
+    block_vp_dequantize,
+    per_channel_fxp_scales,
+)
+from . import param_search, cost_model
+
+__all__ = [
+    "FXPFormat", "VPFormat", "product_format", "default_vp_format",
+    "fxp_quantize", "fxp_to_float", "fxp_saturate", "fxp_quantize_value",
+    "choose_fxp_fraction",
+    "fxp2vp", "fxp2vp_bitwindow", "vp2fxp", "vp_to_float", "float_to_vp",
+    "vp_mul", "vp_mul_to_fxp", "product_scale_lut",
+    "VPTensor", "pack_indices", "unpack_indices", "significand_dtype",
+    "vp_quantize", "vp_dequantize", "vp_fake_quant", "vp_fake_quant_ste",
+    "block_vp_quantize", "block_vp_dequantize", "per_channel_fxp_scales",
+    "param_search", "cost_model",
+]

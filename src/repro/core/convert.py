@@ -1,0 +1,164 @@
+"""FXP <-> VP conversion (paper Sec. II-C / II-E), bit-exact in pure JAX.
+
+The paper's FXP2VP circuit checks, for each fractional-length option f_k,
+whether the MSBs x[W-1 : M+(F-f_k)-1] are all equal (redundant sign bits),
+feeds the K check bits to a leading-one detector to pick the smallest valid
+index i (largest f_i, i.e. most precision), and muxes out the significand
+window x[(F-f_i)+M-1 : (F-f_i)].
+
+Arithmetic equivalence used here (property-tested in tests/test_convert.py
+against the literal bit-window oracle `fxp2vp_bitwindow`):
+
+  MSBs of x above bit position (M + s_k - 1) all equal, where s_k = F - f_k
+    <=>  the arithmetic right shift (x >> s_k) fits in M signed bits.
+
+Because f is sorted DESCENDING, s_k is ascending and validity is monotone in
+k, so `argmax(valid)` is exactly the LOD output.
+
+When the Sec. II-D no-overflow condition (W - F == M - min(f)) does not hold
+for a given format, the last option can still overflow; we saturate the
+significand in that case (flagged by `fxp2vp(..., return_overflow=True)`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .formats import FXPFormat, VPFormat
+
+
+def _shift(v, s: int):
+    """Arithmetic shift by static amount s (right for s>0, left for s<0)."""
+    if s >= 0:
+        return jnp.right_shift(v, s)
+    return jnp.left_shift(v, -s)
+
+
+def fxp2vp(raw, fxp: FXPFormat, vp: VPFormat, return_overflow: bool = False):
+    """Convert raw FXP(W,F) integers to VP(M,f) (significand, index).
+
+    Args:
+      raw: int32 array of W-bit two's-complement raw values.
+      return_overflow: also return a bool array marking saturated elements.
+
+    Returns:
+      (m, i[, overflow]): int32 significands in [-2^(M-1), 2^(M-1)-1],
+      int32 exponent indices in [0, K).
+    """
+    raw = jnp.asarray(raw, jnp.int32)
+    lo, hi = vp.raw_min, vp.raw_max
+
+    m_sel = None
+    i_sel = None
+    valid_any = None
+    # Unrolled over the (static, small) exponent list: first valid k wins.
+    for k in range(vp.K):
+        s_k = fxp.F - vp.f[k]
+        m_k = _shift(raw, s_k)
+        valid_k = (m_k >= lo) & (m_k <= hi)
+        if m_sel is None:
+            m_sel = jnp.where(valid_k, m_k, 0)
+            i_sel = jnp.where(valid_k, 0, 0)
+            valid_any = valid_k
+        else:
+            take = valid_k & ~valid_any
+            m_sel = jnp.where(take, m_k, m_sel)
+            i_sel = jnp.where(take, k, i_sel)
+            valid_any = valid_any | valid_k
+    # No valid option (format violates the no-overflow rule): saturate at the
+    # smallest fractional length.
+    s_last = fxp.F - vp.f[-1]
+    m_last = jnp.clip(_shift(raw, s_last), lo, hi)
+    overflow = ~valid_any
+    m = jnp.where(overflow, m_last, m_sel).astype(jnp.int32)
+    i = jnp.where(overflow, vp.K - 1, i_sel).astype(jnp.int32)
+    if return_overflow:
+        return m, i, overflow
+    return m, i
+
+
+def fxp2vp_bitwindow(raw, fxp: FXPFormat, vp: VPFormat):
+    """Literal bit-window oracle of the paper's Fig. 3 circuit.
+
+    Implements the MSB-equality checks + LOD + mux exactly as described, by
+    explicit bit extraction on the W-bit two's-complement pattern.  Used only
+    in tests to prove `fxp2vp` is bit-identical to the published circuit.
+    """
+    raw = jnp.asarray(raw, jnp.int32)
+    W, F, M = fxp.W, fxp.F, vp.M
+    # Unsigned W-bit pattern of the two's-complement value.
+    u = jnp.where(raw < 0, raw + (1 << W), raw).astype(jnp.uint32)
+
+    def bit(pos):
+        return (jnp.right_shift(u, pos) & jnp.uint32(1)).astype(jnp.int32)
+
+    m_sel, i_sel, valid_any = None, None, None
+    for k in range(vp.K):
+        s_k = F - vp.f[k]
+        top = M + s_k - 1  # lowest MSB position that must match the sign
+        # Equality of bits [W-1 : top]; positions outside [0, W-1] count as
+        # the sign bit (sign extension of the stored pattern).
+        ref = bit(W - 1)
+        eq = jnp.ones_like(raw, bool)
+        for pos in range(max(top, 0), W - 1):
+            eq = eq & (bit(pos) == ref)
+        if top < 0:
+            # Window extends below the LSB: bits there are zero-padded; they
+            # must also equal the sign for the check to pass.
+            eq = eq & (ref == 0)
+        # Significand window: bits [s_k + M - 1 : s_k] (s_k may be negative
+        # for left shifts; out-of-range-low bits read as 0, high as sign).
+        m_k = jnp.zeros_like(raw)
+        for j in range(M):
+            pos = s_k + j
+            if pos < 0:
+                b = jnp.zeros_like(raw)
+            elif pos <= W - 1:
+                b = bit(pos)
+            else:
+                b = ref
+            m_k = m_k + jnp.left_shift(b, j)
+        # Interpret the M-bit window as two's complement.
+        m_k = jnp.where(m_k >= (1 << (M - 1)), m_k - (1 << M), m_k)
+        if m_sel is None:
+            m_sel, i_sel, valid_any = jnp.where(eq, m_k, 0), jnp.zeros_like(raw), eq
+        else:
+            take = eq & ~valid_any
+            m_sel = jnp.where(take, m_k, m_sel)
+            i_sel = jnp.where(take, k, i_sel)
+            valid_any = valid_any | eq
+    m_last = jnp.clip(_shift(raw, F - vp.f[-1]), vp.raw_min, vp.raw_max)
+    m = jnp.where(valid_any, m_sel, m_last).astype(jnp.int32)
+    i = jnp.where(valid_any, i_sel, vp.K - 1).astype(jnp.int32)
+    return m, i
+
+
+def vp2fxp(m, i, vp: VPFormat, fxp: FXPFormat, saturate: bool = True):
+    """Convert VP(M,f) (significand, index) to raw FXP(W,F) integers.
+
+    Paper Sec. II-E: zero-pad W-M LSBs then arithmetic right shift by
+    S_k = (W-F) - (M-f_k); equivalently raw = m * 2^(F - f_k) with
+    truncation when F < f_k.  Unrolled mux over the static exponent list.
+    """
+    m = jnp.asarray(m, jnp.int32)
+    i = jnp.asarray(i, jnp.int32)
+    out = jnp.zeros_like(m)
+    for k in range(vp.K):
+        s = fxp.F - vp.f[k]  # left-shift amount (negative => right shift)
+        out = jnp.where(i == k, _shift(m, -s), out)
+    if saturate:
+        out = jnp.clip(out, fxp.raw_min, fxp.raw_max)
+    return out.astype(jnp.int32)
+
+
+def vp_to_float(m, i, vp: VPFormat, dtype=jnp.float32):
+    """Exact real value of VP numbers: m * 2^(-f_i) (eq. 1)."""
+    m = jnp.asarray(m)
+    scales = jnp.asarray([2.0 ** (-fk) for fk in vp.f], dtype)
+    return m.astype(dtype) * scales[i]
+
+
+def float_to_vp(x, fxp: FXPFormat, vp: VPFormat, rounding: str = "nearest"):
+    """Real -> FXP(W,F) -> VP(M,f); the paper's ingestion pipeline."""
+    from .fxp import fxp_quantize
+
+    return fxp2vp(fxp_quantize(x, fxp, rounding), fxp, vp)

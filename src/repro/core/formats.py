@@ -1,0 +1,171 @@
+"""Number-format descriptors for FXP and VP numbers.
+
+The paper (Sec. II) defines:
+  FXP(W, F): W-bit two's-complement fixed point with F fractional bits.
+  VP(M, f):  M-bit two's-complement significand `m` plus an E-bit exponent
+             *index* `i` into the exponent list `f` (fractional-length
+             options, sorted descending).  Value: x = m * 2**(-f_i).
+
+Formats are static (hashable, usable as jit static args / pytree aux data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class FXPFormat:
+    """FXP(W, F): W-bit two's complement, F fractional bits."""
+
+    W: int
+    F: int
+
+    def __post_init__(self):
+        if self.W < 2:
+            raise ValueError(f"FXP width must be >= 2, got W={self.W}")
+
+    # Raw (integer) significand range.
+    @property
+    def raw_min(self) -> int:
+        return -(1 << (self.W - 1))
+
+    @property
+    def raw_max(self) -> int:
+        return (1 << (self.W - 1)) - 1
+
+    # Real-value range and resolution.
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.F)
+
+    @property
+    def min(self) -> float:
+        return self.raw_min * self.scale
+
+    @property
+    def max(self) -> float:
+        return self.raw_max * self.scale
+
+    def __repr__(self) -> str:
+        return f"FXP({self.W},{self.F})"
+
+
+@dataclasses.dataclass(frozen=True)
+class VPFormat:
+    """VP(M, f): M-bit significand + index into exponent list `f`.
+
+    `f` is the tuple of fractional-length options, sorted descending
+    (f_0 >= f_1 >= ... >= f_{K-1}); K = |f| must be a power of two.
+    """
+
+    M: int
+    f: Tuple[int, ...]
+
+    def __post_init__(self):
+        f = tuple(int(v) for v in self.f)
+        object.__setattr__(self, "f", f)
+        if self.M < 2:
+            raise ValueError(f"VP significand must be >= 2 bits, got M={self.M}")
+        if len(f) < 1 or (len(f) & (len(f) - 1)) != 0:
+            raise ValueError(f"|f| must be a power of two, got {len(f)}")
+        if any(f[k] < f[k + 1] for k in range(len(f) - 1)):
+            raise ValueError(f"exponent list must be sorted descending, got {f}")
+
+    @property
+    def K(self) -> int:
+        """Number of exponent options, 2**E."""
+        return len(self.f)
+
+    @property
+    def E(self) -> int:
+        """Exponent-index bitwidth."""
+        return int(math.log2(len(self.f)))
+
+    @property
+    def raw_min(self) -> int:
+        return -(1 << (self.M - 1))
+
+    @property
+    def raw_max(self) -> int:
+        return (1 << (self.M - 1)) - 1
+
+    @property
+    def max_f(self) -> int:
+        return self.f[0]
+
+    @property
+    def min_f(self) -> int:
+        return self.f[-1]
+
+    @property
+    def bits_per_element(self) -> float:
+        """Storage cost per element: significand + index bits."""
+        return self.M + self.E
+
+    @property
+    def max(self) -> float:
+        """Largest representable magnitude (positive side)."""
+        return self.raw_max * 2.0 ** (-self.min_f)
+
+    @property
+    def resolution(self) -> float:
+        """Finest representable step (at the largest fractional length)."""
+        return 2.0 ** (-self.max_f)
+
+    def value(self, m: int, i: int) -> float:
+        """Real value of (significand, index) — eq. (1)."""
+        return m * 2.0 ** (-self.f[i])
+
+    def __repr__(self) -> str:
+        return f"VP({self.M},{list(self.f)})"
+
+
+def product_format(a: VPFormat, b: VPFormat) -> VPFormat:
+    """Exponent list / significand width of a VP*VP product (Sec. II-B).
+
+    The product exponent list is the pairwise sum of the operand lists in
+    index-concatenation order ((i_a << E_b) | i_b); it is built OFFLINE and
+    handed to the VP2FXP converter — the multiplier itself never adds
+    exponents.  The significand product of M_a x M_b two's-complement inputs
+    fits in (M_a + M_b - 1) bits; the single extreme case
+    (-2^(Ma-1)) * (-2^(Mb-1)) = +2^(Ma+Mb-2) still fits as a signed
+    (Ma+Mb-1)-bit value.
+
+    The pairwise-sum list is generally NOT sorted descending (it is sorted
+    within each i_a-block); product VP numbers are only ever consumed by
+    VP2FXP, which does not require ordering, so we bypass the descending
+    check here via direct construction.
+    """
+    fp = tuple(fa + fb for fa in a.f for fb in b.f)
+    fmt = object.__new__(VPFormat)
+    object.__setattr__(fmt, "M", a.M + b.M - 1)
+    object.__setattr__(fmt, "f", fp)
+    return fmt
+
+
+def default_vp_format(fxp: FXPFormat, M: int, E: int) -> VPFormat:
+    """Default parameter rule of Sec. II-D.
+
+    max(f) = F (full resolution for small numbers) and
+    W - F = M - min(f) (enough integer bits for the largest numbers), with
+    the remaining 2^E - 2 entries spread as evenly as possible in between.
+    """
+    K = 1 << E
+    top, bot = fxp.F, M - (fxp.W - fxp.F)
+    if K == 1:
+        return VPFormat(M, (top,))
+    # Evenly spaced, descending, endpoints pinned.
+    step = (top - bot) / (K - 1)
+    f = sorted({int(round(top - k * step)) for k in range(K)}, reverse=True)
+    # Rounding may collide entries; repair by walking down.
+    while len(f) < K:
+        for v in range(top, bot - (K - len(f)) - 1, -1):
+            if v not in f:
+                f.append(v)
+                break
+        else:
+            f.append(f[-1] - 1)
+        f = sorted(set(f), reverse=True)
+    return VPFormat(M, tuple(f[:K]))

@@ -1,0 +1,60 @@
+"""Two's-complement fixed-point quantization in pure JAX integer ops.
+
+Raw representation: int32 arrays holding the W-bit two's-complement
+significand (W <= 31).  All shifts are arithmetic (jnp.right_shift on
+signed ints sign-extends).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .formats import FXPFormat
+
+
+def fxp_quantize(x, fmt: FXPFormat, rounding: str = "nearest"):
+    """Quantize real `x` to the raw integer FXP grid (saturating).
+
+    rounding: 'nearest' (round-half-away-from-zero, matching common DSP
+    quantizers) or 'trunc' (floor, i.e. drop LSBs as hardware truncation).
+    """
+    scaled = jnp.asarray(x, jnp.float64 if jnp.asarray(x).dtype == jnp.float64 else jnp.float32) * (2.0 ** fmt.F)
+    if rounding == "nearest":
+        raw = jnp.round(scaled)
+    elif rounding == "trunc":
+        raw = jnp.floor(scaled)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    raw = jnp.clip(raw, fmt.raw_min, fmt.raw_max)
+    return raw.astype(jnp.int32)
+
+
+def fxp_to_float(raw, fmt: FXPFormat, dtype=jnp.float32):
+    """Real value of raw FXP integers."""
+    return raw.astype(dtype) * jnp.asarray(2.0 ** (-fmt.F), dtype)
+
+
+def fxp_saturate(raw, fmt: FXPFormat):
+    """Clip raw integers into the W-bit two's-complement range."""
+    return jnp.clip(raw, fmt.raw_min, fmt.raw_max).astype(jnp.int32)
+
+
+def fxp_quantize_value(x, fmt: FXPFormat, rounding: str = "nearest"):
+    """Quantize-dequantize: nearest representable FXP real value."""
+    return fxp_to_float(fxp_quantize(x, fmt, rounding), fmt)
+
+
+def choose_fxp_fraction(max_abs: float, W: int) -> FXPFormat:
+    """Pick F so that values with |x| <= max_abs fit in FXP(W, F).
+
+    F = W - 1 - ceil(log2(max_abs)) for max_abs > 0; signals normalized to
+    (-1, 1) get F = W - 1 (the paper's convention in Sec. III-A).
+    """
+    import math
+
+    if max_abs <= 0:
+        return FXPFormat(W, W - 1)
+    int_bits = max(0, math.ceil(math.log2(max_abs + 1e-300)))
+    # one extra integer bit if max_abs is an exact power of two boundary case
+    if max_abs > (1 << int_bits) - 2.0 ** -(W - 1 - int_bits):
+        int_bits += 0  # clip handles the boundary; raw_max saturates
+    return FXPFormat(W, W - 1 - int_bits)

@@ -1,0 +1,121 @@
+"""Monte-Carlo VP parameter selection (paper Sec. II-D).
+
+"The optimal parameters are determined for each signal individually using
+Monte-Carlo simulations to ensure that the precision loss is negligible for
+the target application.  In general, we set max(f) = F ... and min(f) such
+that W - F = M - min(f)."
+
+Given samples of a signal (already in, or quantized to, a reference
+FXP(W, F) grid), we search:
+
+  * the exponent list `f` for fixed (M, E): endpoints pinned by the Sec. II-D
+    rules, interior entries chosen by exhaustive/greedy MSE minimization over
+    the samples;
+  * the smallest significand width M meeting an NMSE target.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .formats import FXPFormat, VPFormat
+from .fxp import fxp_quantize, fxp_to_float
+from .convert import fxp2vp, vp_to_float
+
+
+def vp_nmse(samples: np.ndarray, fxp: FXPFormat, vp: VPFormat) -> float:
+    """NMSE of representing `samples` in VP(M, f) via the FXP(W,F) grid."""
+    import jax.numpy as jnp
+
+    x = np.asarray(samples, np.float64).ravel()
+    raw = np.asarray(fxp_quantize(x.astype(np.float32), fxp))
+    m, i = fxp2vp(raw, fxp, vp)
+    xq = np.asarray(vp_to_float(m, i, vp, jnp.float64))
+    num = float(np.mean((xq - x) ** 2))
+    den = float(np.mean(x**2)) + 1e-300
+    return num / den
+
+
+def candidate_lists(fxp: FXPFormat, M: int, E: int) -> Sequence[Tuple[int, ...]]:
+    """All descending exponent lists with Sec. II-D endpoint rules."""
+    K = 1 << E
+    top = fxp.F                    # max(f) = F
+    bot = M - (fxp.W - fxp.F)      # W - F = M - min(f)
+    if bot > top:
+        raise ValueError(f"infeasible: M={M} too large for {fxp} (bot {bot} > top {top})")
+    if K == 1:
+        return [(top,)]
+    if K == 2:
+        return [(top, bot)]
+    interior = list(range(bot + 1, top))
+    lists = []
+    for combo in itertools.combinations(interior, K - 2):
+        lists.append(tuple(sorted((top, bot) + combo, reverse=True)))
+    return lists
+
+
+def search_exponent_list(
+    samples: np.ndarray,
+    fxp: FXPFormat,
+    M: int,
+    E: int,
+    max_exhaustive: int = 20000,
+    seed: int = 0,
+) -> Tuple[VPFormat, float]:
+    """Best exponent list for fixed (M, E) by MSE over the samples.
+
+    Exhaustive when the candidate count is small; otherwise greedy forward
+    selection (add the interior entry that most reduces MSE, K-2 times).
+    Returns (format, nmse).
+    """
+    cands = candidate_lists(fxp, M, E)
+    if len(cands) <= max_exhaustive:
+        best, best_err = None, math.inf
+        for f in cands:
+            err = vp_nmse(samples, fxp, VPFormat(M, f))
+            if err < best_err:
+                best, best_err = f, err
+        return VPFormat(M, best), best_err
+    # Greedy forward selection.
+    K = 1 << E
+    top, bot = fxp.F, M - (fxp.W - fxp.F)
+    chosen = [top, bot]
+    pool = [v for v in range(bot + 1, top)]
+    while len(chosen) < K:
+        best_v, best_err = None, math.inf
+        for v in pool:
+            f = tuple(sorted(chosen + [v], reverse=True))
+            # Pad to a power of two by duplicating nothing — evaluate on the
+            # partial list only if it is a power of two; otherwise rank by
+            # the padded list with the worst-case duplicate removed.
+            if len(f) & (len(f) - 1):
+                f = f + (f[-1],) * (2 ** math.ceil(math.log2(len(f))) - len(f))
+                f = tuple(sorted(f, reverse=True))
+            err = vp_nmse(samples, fxp, VPFormat(M, f))
+            if err < best_err:
+                best_v, best_err = v, err
+        chosen.append(best_v)
+        pool.remove(best_v)
+    f = tuple(sorted(chosen, reverse=True))
+    return VPFormat(M, f), vp_nmse(samples, fxp, VPFormat(M, f))
+
+
+def search_min_M(
+    samples: np.ndarray,
+    fxp: FXPFormat,
+    E: int,
+    nmse_target: float,
+    M_range: Tuple[int, int] = (4, 16),
+) -> Optional[Tuple[VPFormat, float]]:
+    """Smallest M whose best exponent list meets `nmse_target`."""
+    for M in range(M_range[0], M_range[1] + 1):
+        try:
+            fmt, err = search_exponent_list(samples, fxp, M, E)
+        except ValueError:
+            continue
+        if err <= nmse_target:
+            return fmt, err
+    return None

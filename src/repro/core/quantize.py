@@ -1,0 +1,144 @@
+"""Tensor-level VP quantization API.
+
+Pipeline (paper Sec. II-A): real -> FXP(W, F) -> VP(M, f).  This module
+packages that pipeline for ML tensors:
+
+  * `vp_quantize` / `vp_dequantize`: bit-exact VPTensor round trip.
+  * `vp_fake_quant` + `vp_fake_quant_ste`: quantize-dequantize in one float
+    graph (for accuracy sims and QAT; STE passes gradients through).
+  * per-channel format selection for weight matrices.
+  * `block_vp_quantize`: the TPU-native block-VP variant — one exponent index
+    per block of elements (the VP analogue of BFP, still with an arbitrary
+    exponent list), enabling int8 MXU matmuls.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FXPFormat, VPFormat
+from .fxp import fxp_quantize, fxp_to_float
+from .convert import fxp2vp, vp_to_float
+from .vp_tensor import VPTensor, significand_dtype
+
+
+def vp_quantize(x, fxp: FXPFormat, vp: VPFormat, rounding: str = "nearest") -> VPTensor:
+    """Real tensor -> VPTensor through the FXP(W,F) grid."""
+    raw = fxp_quantize(x, fxp, rounding)
+    m, i = fxp2vp(raw, fxp, vp)
+    return VPTensor(
+        m=m.astype(significand_dtype(vp.M)),
+        i=i.astype(jnp.uint8),
+        fmt=vp,
+        fxp=fxp,
+    )
+
+
+def vp_dequantize(t: VPTensor, dtype=jnp.float32) -> jax.Array:
+    return t.to_float(dtype)
+
+
+def vp_fake_quant(x, fxp: FXPFormat, vp: VPFormat, rounding: str = "nearest"):
+    """Quantize-dequantize: the VP-representable value nearest-ish to x.
+
+    ('nearest-ish': FXP rounds to nearest; the FXP2VP bit-window then
+    truncates dropped LSBs, exactly like the hardware.)"""
+    raw = fxp_quantize(x, fxp, rounding)
+    m, i = fxp2vp(raw, fxp, vp)
+    return vp_to_float(m, i, vp, jnp.asarray(x).dtype)
+
+
+@jax.custom_vjp
+def _ste(x, y):
+    """Forward y, backward identity onto x."""
+    return y
+
+
+def _ste_fwd(x, y):
+    return y, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def vp_fake_quant_ste(x, fxp: FXPFormat, vp: VPFormat):
+    """QAT straight-through estimator around `vp_fake_quant`."""
+    return _ste(x, vp_fake_quant(x, fxp, vp))
+
+
+# ---------------------------------------------------------------------------
+# Per-channel formats for weight matrices
+# ---------------------------------------------------------------------------
+
+def per_channel_fxp_scales(w: jax.Array, W: int, axis: int = 0):
+    """Power-of-two per-channel F so each channel fits FXP(W, F).
+
+    Returns int32 F per channel along `axis`'s complement (reduce over
+    `axis`).  Power-of-two scales keep the VP semantics exact."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    # F = W-1-ceil(log2(amax)); amax<=0 -> F = W-1
+    f = jnp.where(
+        amax > 0,
+        (W - 1) - jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))),
+        W - 1,
+    )
+    return f.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Block VP (beyond-paper, TPU-native): shared exponent index per block
+# ---------------------------------------------------------------------------
+
+def block_vp_quantize(
+    x: jax.Array,
+    fxp: FXPFormat,
+    vp: VPFormat,
+    block: int,
+    axis: int = -1,
+) -> Tuple[jax.Array, jax.Array]:
+    """Quantize with ONE exponent index per `block` contiguous elements.
+
+    The shared index for a block is the per-element FXP2VP index of the
+    block's largest-magnitude element (the element needing the smallest
+    fractional length) — every element in the block is then representable
+    without overflow at that fractional length, mirroring BFP's max-exponent
+    rule but over the arbitrary VP exponent list.
+
+    Returns (m, i_block): significands shaped like x, indices with the
+    blocked axis reduced by `block`.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if n % block:
+        raise ValueError(f"axis size {n} not divisible by block {block}")
+    raw = fxp_quantize(x, fxp)
+    # Per-element index, then max over each block (larger index = smaller
+    # fractional length since f is descending).
+    _, i_elt = fxp2vp(raw, fxp, vp)
+    shp = list(x.shape)
+    shp[axis: axis + 1] = [n // block, block]
+    i_blk = jnp.max(i_elt.reshape(shp), axis=axis + 1)
+    # Re-quantize every element at the block's fractional length.
+    i_full = jnp.repeat(i_blk, block, axis=axis)
+    m = jnp.zeros_like(raw)
+    for k in range(vp.K):
+        s_k = fxp.F - vp.f[k]
+        m_k = jnp.right_shift(raw, s_k) if s_k >= 0 else jnp.left_shift(raw, -s_k)
+        m = jnp.where(i_full == k, m_k, m)
+    m = jnp.clip(m, vp.raw_min, vp.raw_max)
+    return m.astype(significand_dtype(vp.M)), i_blk.astype(jnp.uint8)
+
+
+def block_vp_dequantize(m, i_blk, vp: VPFormat, block: int, axis: int = -1,
+                        dtype=jnp.float32):
+    axis = axis % m.ndim
+    scales = jnp.asarray([2.0 ** (-fk) for fk in vp.f], dtype)
+    s = scales[i_blk.astype(jnp.int32)]
+    s = jnp.repeat(s, block, axis=axis)
+    return m.astype(dtype) * s

@@ -1,0 +1,48 @@
+"""VP arithmetic (paper Sec. II-B).
+
+A VP multiplier is a plain FXP multiplier on the significands; the product's
+exponent index is the CONCATENATION of the operand indices, and the product's
+exponent list is the pairwise sum f_a (+) f_b built offline
+(`formats.product_format`).  No exponent addition happens "in hardware" —
+downstream VP2FXP consumes the concatenated index directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .formats import FXPFormat, VPFormat, product_format
+from .convert import vp2fxp
+
+
+def vp_mul(m_a, i_a, a_fmt: VPFormat, m_b, i_b, b_fmt: VPFormat):
+    """Multiply two VP numbers elementwise.
+
+    Returns (m_p, i_p, p_fmt): the significand product (exact, int32 — valid
+    for M_a + M_b - 1 <= 31), the concatenated exponent index
+    (i_a << E_b) | i_b, and the offline product format.
+    """
+    m_p = jnp.asarray(m_a, jnp.int32) * jnp.asarray(m_b, jnp.int32)
+    i_p = jnp.left_shift(jnp.asarray(i_a, jnp.int32), b_fmt.E) | jnp.asarray(i_b, jnp.int32)
+    return m_p, i_p, product_format(a_fmt, b_fmt)
+
+
+def vp_mul_to_fxp(m_a, i_a, a_fmt: VPFormat, m_b, i_b, b_fmt: VPFormat,
+                  out_fmt: FXPFormat):
+    """VP x VP -> FXP product, as in the paper's SP-CM (Fig. 10).
+
+    Each real-valued multiplier is followed by a VP2FXP converter so that all
+    additions downstream run in plain FXP.
+    """
+    m_p, i_p, p_fmt = vp_mul(m_a, i_a, a_fmt, m_b, i_b, b_fmt)
+    return vp2fxp(m_p, i_p, p_fmt, out_fmt)
+
+
+def product_scale_lut(a_fmt: VPFormat, b_fmt: VPFormat, dtype=jnp.float32):
+    """2^(E_a+E_b)-entry LUT of product scales 2^-(f_a[ia]+f_b[ib]).
+
+    Indexed by the concatenated exponent index — the TPU-native realization
+    of "no exponent addition": the only per-product exponent work is one tiny
+    table lookup.
+    """
+    p = product_format(a_fmt, b_fmt)
+    return jnp.asarray([2.0 ** (-fv) for fv in p.f], dtype)

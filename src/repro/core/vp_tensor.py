@@ -1,0 +1,100 @@
+"""VPTensor: a pytree container for VP-quantized arrays.
+
+Stores the significand plane (int8 for M <= 8, else int16/int32) and the
+exponent-index plane (uint8, optionally bit-packed 2-bit/4-bit for storage &
+bandwidth accounting).  The format is static aux data, so VPTensor flows
+through jit/pjit without retracing on values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FXPFormat, VPFormat
+
+
+def significand_dtype(M: int):
+    if M <= 8:
+        return jnp.int8
+    if M <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class VPTensor:
+    """VP-quantized tensor: significand plane + exponent-index plane."""
+
+    m: jax.Array            # significands, significand_dtype(fmt.M)
+    i: jax.Array            # exponent indices, uint8 (unpacked)
+    fmt: VPFormat           # static
+    fxp: FXPFormat          # static: the FXP grid this was quantized from
+
+    def tree_flatten(self):
+        return (self.m, self.i), (self.fmt, self.fxp)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        m, i = children
+        fmt, fxp = aux
+        return cls(m=m, i=i, fmt=fmt, fxp=fxp)
+
+    @property
+    def shape(self):
+        return self.m.shape
+
+    @property
+    def storage_bits_per_element(self) -> float:
+        """Packed storage cost: M-bit significand + E-bit index.
+
+        The planes round up to 8-bit container lanes for the significand and
+        pack indices at 2^E states per element (e.g. E=2 -> 4 per byte)."""
+        sig_bits = jnp.dtype(significand_dtype(self.fmt.M)).itemsize * 8
+        return sig_bits + self.fmt.E
+
+    def to_float(self, dtype=jnp.float32) -> jax.Array:
+        scales = jnp.asarray([2.0 ** (-fk) for fk in self.fmt.f], dtype)
+        return self.m.astype(dtype) * scales[self.i.astype(jnp.int32)]
+
+    def __repr__(self):
+        return f"VPTensor(shape={self.m.shape}, fmt={self.fmt}, fxp={self.fxp})"
+
+
+# ---------------------------------------------------------------------------
+# Index-plane bit packing (storage/bandwidth; kernels consume unpacked u8).
+# ---------------------------------------------------------------------------
+
+def pack_indices(i: jax.Array, E: int) -> jax.Array:
+    """Pack E-bit indices along the last axis into a uint8 plane.
+
+    Requires E in {1, 2, 4, 8} and last-dim divisible by 8//E.
+    """
+    if E == 0:
+        return jnp.zeros(i.shape[:-1] + (0,), jnp.uint8)
+    if E not in (1, 2, 4, 8):
+        raise ValueError(f"packing supports E in {{1,2,4,8}}, got {E}")
+    per = 8 // E
+    if i.shape[-1] % per:
+        raise ValueError(f"last dim {i.shape[-1]} not divisible by {per}")
+    u = i.astype(jnp.uint8).reshape(*i.shape[:-1], i.shape[-1] // per, per)
+    out = jnp.zeros(u.shape[:-1], jnp.uint8)
+    for j in range(per):
+        out = out | jnp.left_shift(u[..., j], jnp.uint8(j * E))
+    return out
+
+
+def unpack_indices(packed: jax.Array, E: int, n: int) -> jax.Array:
+    """Inverse of `pack_indices`; `n` is the unpacked last-dim size."""
+    if E == 0:
+        return jnp.zeros(packed.shape[:-1] + (n,), jnp.uint8)
+    per = 8 // E
+    shifts = jnp.arange(per, dtype=jnp.uint8) * E
+    mask = jnp.uint8((1 << E) - 1)
+    u = jnp.bitwise_and(
+        jnp.right_shift(packed[..., :, None], shifts), mask
+    )
+    return u.reshape(*packed.shape[:-1], packed.shape[-1] * per)[..., :n]

@@ -1,0 +1,81 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+Produces language-model batches from a counter-based PRNG stream: batch i
+is a pure function of (seed, i), so any host can regenerate any shard —
+restart/elastic-rescale resume is just "set the counter" (the counter is
+stored in the checkpoint manifest).  Per-host sharding takes every
+n_hosts-th batch row.
+
+The synthetic distribution is Zipfian over the vocab with short-range
+repetition structure, so models actually learn (loss decreases) and the
+pipeline exercises the same shapes/dtypes as a real tokenized corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    repeat_p: float = 0.3       # probability of short-range copy
+
+
+@dataclasses.dataclass
+class DataState:
+    """Checkpointable pipeline position."""
+    batch_index: int = 0
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        assert cfg.global_batch % n_hosts == 0
+        self.local_batch = cfg.global_batch // n_hosts
+        # Zipf lookup table (shared, deterministic)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self._cdf = np.cumsum(p / p.sum())
+
+    def batch_at(self, index: int, state: Optional[DataState] = None
+                 ) -> Dict[str, jnp.ndarray]:
+        """Batch `index`, host-sharded; pure function of (seed, index)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, index, self.host_id]))
+        shape = (self.local_batch, cfg.seq_len + 1)
+        u = rng.random(shape)
+        toks = np.searchsorted(self._cdf, u).astype(np.int32)
+        toks = np.minimum(toks, cfg.vocab - 1)
+        # short-range copies give learnable structure
+        copy = rng.random(shape) < cfg.repeat_p
+        lag = rng.integers(1, 8, size=shape)
+        idx = np.maximum(np.arange(cfg.seq_len + 1)[None, :] - lag, 0)
+        toks = np.where(copy, np.take_along_axis(toks, idx, 1), toks)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        i = 0
+        while True:
+            yield self.batch_at(i)
+            i += 1
+
+    def resume_iter(self, state: DataState):
+        i = state.batch_index
+        while True:
+            yield self.batch_at(i), DataState(i + 1)
+            i += 1

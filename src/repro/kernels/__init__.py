@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the VP compute hot-spots.
+
+Each kernel has: <name>.py (pl.pallas_call + BlockSpec), a pure-jnp oracle
+in ref.py, and a padded/dispatching public wrapper in ops.py.
+"""
+from .ops import vp_quant, vp_dequant, vp_matmul, block_vp_matmul
+from . import ref, ops
+
+__all__ = ["vp_quant", "vp_dequant", "vp_matmul", "block_vp_matmul",
+           "ref", "ops"]

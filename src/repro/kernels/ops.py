@@ -1,0 +1,119 @@
+"""Public ops: padding, backend dispatch (TPU kernel vs CPU ref), reshaping.
+
+Models and the MIMO application call these; they never touch pallas_call
+directly.  On a TPU backend the Pallas kernels run natively; on CPU the
+pure-jnp refs run (same math — the refs ARE the oracles the kernels are
+tested against), so the dry-run lowers a graph with identical FLOP/byte
+structure.  `interpret=True` forces the Pallas kernel body on CPU (used by
+the kernel tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FXPFormat, VPFormat
+from . import ref
+from .vp_quant import vp_quant_pallas
+from .vp_dequant import vp_dequant_pallas
+from .vp_matmul import vp_matmul_pallas
+from .vp_block_matmul import block_vp_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2(x, br, bc, value=0):
+    R, C = x.shape
+    pr, pc = (-R) % br, (-C) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)), constant_values=value)
+    return x
+
+
+def vp_quant(x, fxp: FXPFormat, vp: VPFormat, interpret: Optional[bool] = None):
+    """float tensor (any rank) -> (significand, index) planes, same shape."""
+    use_kernel = _on_tpu() if interpret is None else True
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    if not use_kernel:
+        m, i = ref.vp_quant_ref(x2, fxp, vp)
+    else:
+        R, C = x2.shape
+        xp = _pad2(x2, 256, 256)
+        m, i = vp_quant_pallas(xp, fxp, vp, interpret=bool(interpret))
+        m, i = m[:R, :C], i[:R, :C]
+    return m.reshape(shape), i.reshape(shape)
+
+
+def vp_dequant(m, i, vp: VPFormat, dtype=jnp.float32,
+               interpret: Optional[bool] = None):
+    use_kernel = _on_tpu() if interpret is None else True
+    shape = m.shape
+    m2 = m.reshape(-1, shape[-1]) if m.ndim != 2 else m
+    i2 = i.reshape(-1, shape[-1]) if i.ndim != 2 else i
+    if not use_kernel:
+        out = ref.vp_dequant_ref(m2, i2, vp, dtype)
+    else:
+        R, C = m2.shape
+        mp, ip = _pad2(m2, 256, 256), _pad2(i2, 256, 256)
+        out = vp_dequant_pallas(mp, ip, vp, dtype, interpret=bool(interpret))
+        out = out[:R, :C]
+    return out.reshape(shape)
+
+
+def vp_matmul(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act=None, b_act=None,
+    blocks: Tuple[int, int, int] = (256, 256, 256),
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """(M,K) x (K,N) VP matmul; CSPADE masks optional (tile grid = blocks)."""
+    use_kernel = _on_tpu() if interpret is None else True
+    if not use_kernel:
+        return ref.vp_matmul_ref(
+            a_m, a_i, b_m, b_i, a_fmt, b_fmt,
+            a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    bm, bk, bn = blocks
+    M, K = a_m.shape
+    _, N = b_m.shape
+    am, ai = _pad2(a_m, bm, bk), _pad2(a_i, bm, bk)
+    bm_, bi = _pad2(b_m, bk, bn), _pad2(b_i, bk, bn)
+    out = vp_matmul_pallas(
+        am, ai, bm_, bi, a_fmt, b_fmt,
+        a_act=a_act, b_act=b_act,
+        interpret=bool(interpret), blocks=blocks, out_dtype=out_dtype)
+    return out[:M, :N]
+
+
+def block_vp_matmul(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    bk: int = 256,
+    blocks: Tuple[int, int, int] = (256, 256, 256),
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """Block-VP int8 matmul; index granularity = (row, k-block)."""
+    assert blocks[1] == bk, "kernel k-tile must equal index block size"
+    use_kernel = _on_tpu() if interpret is None else True
+    if not use_kernel:
+        return ref.block_vp_matmul_ref(
+            a_m, a_i, b_m, b_i, a_fmt, b_fmt, bk=bk, out_dtype=out_dtype)
+    M, K = a_m.shape
+    _, N = b_m.shape
+    bm, _, bn = blocks
+    am = _pad2(a_m, bm, bk)
+    bm_ = _pad2(b_m, bk, bn)
+    ai = _pad2(a_i, bm, 1)
+    bi = _pad2(b_i, 1, bn)
+    out = block_vp_matmul_pallas(
+        am, ai, bm_, bi, a_fmt, b_fmt,
+        interpret=bool(interpret), blocks=blocks, out_dtype=out_dtype)
+    return out[:M, :N]

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose), and the
+CPU execution path used by models / the dry-run (same math, no Pallas).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FXPFormat, VPFormat
+from repro.core.fxp import fxp_quantize
+from repro.core.convert import fxp2vp, vp_to_float
+
+
+def vp_quant_ref(x, fxp: FXPFormat, vp: VPFormat):
+    """float -> (int8 significand, uint8 index) through the FXP grid."""
+    raw = fxp_quantize(x, fxp)
+    m, i = fxp2vp(raw, fxp, vp)
+    from repro.core.vp_tensor import significand_dtype
+
+    return m.astype(significand_dtype(vp.M)), i.astype(jnp.uint8)
+
+
+def vp_dequant_ref(m, i, vp: VPFormat, dtype=jnp.float32):
+    """(significand, index) -> real values m * 2^-f_i."""
+    return vp_to_float(m, i, vp, dtype)
+
+
+def tile_activity(x_abs_max, threshold: float):
+    """CSPADE tile-activity flag: a tile is 'loud' if its max magnitude
+    reaches the threshold (paper Sec. IV-A, tile-granular adaptation)."""
+    return x_abs_max >= threshold
+
+
+def cspade_tile_masks(
+    a_deq, b_deq, bm: int, bk: int, bn: int,
+    thresh_a: float, thresh_b: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile activity of A (M,K) and B (K,N) on the kernel tiling grid.
+
+    A partial-product TILE is skipped when BOTH operand tiles are quiet —
+    the tile-granular analogue of CSPADE's per-scalar muting.
+    Returns (a_act [M/bm, K/bk], b_act [K/bk, N/bn]) int32 flags.
+    """
+    M, K = a_deq.shape
+    _, N = b_deq.shape
+    a_tiles = jnp.abs(a_deq).reshape(M // bm, bm, K // bk, bk).max((1, 3))
+    b_tiles = jnp.abs(b_deq).reshape(K // bk, bk, N // bn, bn).max((1, 3))
+    return (
+        tile_activity(a_tiles, thresh_a).astype(jnp.int32),
+        tile_activity(b_tiles, thresh_b).astype(jnp.int32),
+    )
+
+
+def vp_matmul_ref(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act: Optional[jax.Array] = None,
+    b_act: Optional[jax.Array] = None,
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.float32,
+):
+    """VP x VP matmul oracle: dequantize then f32 matmul.
+
+    With activity masks, contributions from tile-pairs where BOTH operands
+    are quiet are zeroed (exactly what the kernel's `pl.when` skip does).
+    """
+    a = vp_to_float(a_m, a_i, a_fmt, out_dtype)
+    b = vp_to_float(b_m, b_i, b_fmt, out_dtype)
+    if a_act is None:
+        return a @ b
+    bm, bk, bn = tiles
+    M, K = a.shape
+    _, N = b.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    # mute[mi, ki, ni]: both quiet -> kill that tile-pair's contribution.
+    keep = (a_act[:, :, None] | b_act[None, :, :]).astype(out_dtype)
+    a_t = a.reshape(nm, bm, nk, bk).transpose(0, 2, 1, 3)
+    b_t = b.reshape(nk, bk, nn, bn).transpose(0, 2, 1, 3)
+    # per-(mi,ki,ni) tile product
+    prod = jnp.einsum("xyab,yzbc->xyzac", a_t, b_t)
+    prod = prod * keep[:, :, :, None, None]
+    out = prod.sum(1)  # sum over k tiles
+    return out.transpose(0, 2, 1, 3).reshape(M, N)
+
+
+def block_vp_matmul_ref(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    bk: int,
+    out_dtype=jnp.float32,
+):
+    """Block-VP matmul oracle.
+
+    a_m (M, K) int8 significands with a_i (M, K//bk) per-(row, k-block)
+    exponent indices; b_m (K, N) with b_i (K//bk, N).  Within k-block `t`:
+      out += (lutA[a_i[:, t]] outer lutB[b_i[t, :]]) * (A_t @ B_t in int32)
+    """
+    M, K = a_m.shape
+    _, N = b_m.shape
+    nk = K // bk
+    lut_a = jnp.asarray([2.0 ** (-fv) for fv in a_fmt.f], out_dtype)
+    lut_b = jnp.asarray([2.0 ** (-fv) for fv in b_fmt.f], out_dtype)
+    out = jnp.zeros((M, N), out_dtype)
+    for t in range(nk):
+        at = a_m[:, t * bk:(t + 1) * bk]
+        bt = b_m[t * bk:(t + 1) * bk, :]
+        acc = jax.lax.dot_general(
+            at, bt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        sa = lut_a[a_i[:, t].astype(jnp.int32)]
+        sb = lut_b[b_i[t, :].astype(jnp.int32)]
+        out = out + acc.astype(out_dtype) * sa[:, None] * sb[None, :]
+    return out

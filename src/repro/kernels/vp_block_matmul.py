@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: block-VP int8 MXU matmul (beyond-paper, TPU-native).
+
+One exponent index per (row x k-tile) of A and per (k-tile x col) of B —
+the VP analogue of block floating point, but over an ARBITRARY exponent
+list.  Significands stay int8 all the way into the MXU
+(int8 x int8 -> int32, 2x the bf16 rate on v5e-class chips); the int32
+tile accumulator is then scaled by the factorized product scales
+   2^-(f_a[ia] + f_b[ib]) = lutA[ia] * lutB[ib]
+(one VPU multiply per row/col vector) — the paper's "no exponent
+addition" property: per-product exponent work is two tiny LUT reads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import VPFormat
+
+BM, BK, BN = 256, 256, 256
+
+
+def _lut_gather(i, fmt: VPFormat, dtype):
+    """scale[i] via an unrolled select cascade (K <= 16)."""
+    scale = jnp.full(i.shape, jnp.asarray(2.0 ** (-fmt.f[0]), dtype))
+    for k in range(1, fmt.K):
+        scale = jnp.where(
+            i == jnp.uint8(k), jnp.asarray(2.0 ** (-fmt.f[k]), dtype), scale)
+    return scale
+
+
+def _block_vp_matmul_kernel(
+    a_m_ref, a_i_ref, b_m_ref, b_i_ref, o_ref, acc_ref,
+    *, a_fmt: VPFormat, b_fmt: VPFormat, nk: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 x int8 -> int32 on the MXU.
+    acc_i32 = jax.lax.dot_general(
+        a_m_ref[...], b_m_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # Factorized scales: one per A row, one per B col (this k-tile).
+    sa = _lut_gather(a_i_ref[...], a_fmt, jnp.float32)  # (bm, 1)
+    sb = _lut_gather(b_i_ref[...], b_fmt, jnp.float32)  # (1, bn)
+    acc_ref[...] += acc_i32.astype(jnp.float32) * sa * sb
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_fmt", "b_fmt", "interpret", "blocks", "out_dtype"),
+)
+def block_vp_matmul_pallas(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    interpret: bool = False,
+    blocks=(BM, BK, BN),
+    out_dtype=jnp.float32,
+):
+    """Block-VP matmul.
+
+    a_m (M, K) int8, a_i (M, K/bk) uint8; b_m (K, N) int8, b_i (K/bk, N)
+    uint8.  The exponent-index granularity equals the kernel k-tile.
+    """
+    (bm, bk, bn) = blocks
+    M, K = a_m.shape
+    _, N = b_m.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    assert a_i.shape == (M, nk), (a_i.shape, (M, nk))
+    assert b_i.shape == (nk, N), (b_i.shape, (nk, N))
+
+    kernel = functools.partial(
+        _block_vp_matmul_kernel, a_fmt=a_fmt, b_fmt=b_fmt, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bm, 1), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((1, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a_m, a_i, b_m, b_i)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: VP matrix-multiply engine (the paper's MVM, Sec. IV).
+
+TPU adaptation of the B-VP design:
+  * operands arrive as VP planes (int8 significand + uint8 exponent index)
+    — 8.25 bits/element of HBM traffic instead of 16 (bf16);
+  * each VMEM tile is dequantized in-register (m * scale[i], the VP2FXP
+    barrel-mux analogue) and fed to the MXU in f32/bf16;
+  * CSPADE is tile-granular: per-tile activity flags are scalar-prefetched
+    into SMEM and `pl.when` skips the MXU op when BOTH operand tiles are
+    quiet (the systolic-array analogue of partial-product muting).
+
+Grid is (m, n, k) with k innermost; a VMEM f32 scratch accumulates across
+the k steps and is flushed to the output on the last step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import VPFormat
+
+BM, BK, BN = 256, 256, 256
+
+
+def _dequant(m, i, fmt: VPFormat, dtype):
+    x = m.astype(dtype)
+    scale = jnp.full(m.shape, jnp.asarray(2.0 ** (-fmt.f[0]), dtype))
+    for k in range(1, fmt.K):
+        scale = jnp.where(
+            i == jnp.uint8(k), jnp.asarray(2.0 ** (-fmt.f[k]), dtype), scale)
+    return x * scale
+
+
+def _vp_matmul_kernel(
+    # scalar-prefetch operands (SMEM)
+    a_act_ref, b_act_ref,
+    # tensor operands (VMEM tiles)
+    a_m_ref, a_i_ref, b_m_ref, b_i_ref,
+    # outputs / scratch
+    o_ref, acc_ref,
+    *, a_fmt: VPFormat, b_fmt: VPFormat, nk: int, cspade: bool, dtype,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        a = _dequant(a_m_ref[...], a_i_ref[...], a_fmt, dtype)
+        b = _dequant(b_m_ref[...], b_i_ref[...], b_fmt, dtype)
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    if cspade:
+        mi, ni = pl.program_id(0), pl.program_id(1)
+        active = (a_act_ref[mi, ki] | b_act_ref[ki, ni]) != 0
+        pl.when(active)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_fmt", "b_fmt", "interpret", "blocks", "out_dtype"),
+)
+def vp_matmul_pallas(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act=None, b_act=None,
+    interpret: bool = False,
+    blocks=(BM, BK, BN),
+    out_dtype=jnp.float32,
+):
+    """VP x VP -> f32 matmul.  a: (M, K) planes, b: (K, N) planes.
+
+    `a_act` (M/bm, K/bk) / `b_act` (K/bk, N/bn) int32 CSPADE tile-activity
+    flags (None disables the skip logic entirely).
+    Shapes must be tile-multiples (ops.py pads).
+    """
+    (bm, bk, bn) = blocks
+    M, K = a_m.shape
+    _, N = b_m.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    cspade = a_act is not None
+    if not cspade:
+        a_act = jnp.ones((nm, nk), jnp.int32)
+        b_act = jnp.ones((nk, nn), jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nm, nn, nk),
+        in_specs=[
+            # index maps get the scalar-prefetch refs as trailing args
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki, *_: (mi, ki)),
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki, *_: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki, *_: (ki, ni)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki, *_: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki, *_: (mi, ni)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _vp_matmul_kernel,
+        a_fmt=a_fmt, b_fmt=b_fmt, nk=nk, cspade=cspade, dtype=jnp.float32,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a_act, b_act, a_m, a_i, b_m, b_i)

@@ -1,0 +1,339 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--quant vp] [--out artifacts/...]
+
+Proves the distribution config is coherent on the production meshes
+(16x16 single pod; 2x16x16 multi-pod) without hardware: every input is a
+ShapeDtypeStruct (no allocation), `.lower().compile()` must succeed, and
+the compiled artifact yields the memory/cost/collective numbers consumed
+by the roofline analysis (EXPERIMENTS.md).
+"""
+# The VERY FIRST lines — before ANY other import, since jax locks the
+# device count on first init:
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.configs import registry
+from repro.models import (
+    init_params, init_cache, quantize_params, model_dtype,
+)
+from repro.models.model import _cross_kv
+from repro.optim.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import (
+    make_train_step, make_serve_step, make_prefill_step,
+)
+from repro.parallel import sharding as shd
+from repro.launch.mesh import make_production_mesh
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Cells whose decode KV cache exceeds per-device HBM unless the cache
+# SEQUENCE axis is sharded (flash-decode combine via GSPMD):
+SEQ_SHARD_CACHE = {
+    ("qwen3-0.6b", "decode_32k"): ("model",),
+    ("stablelm-12b", "decode_32k"): ("model",),
+    ("qwen3-moe-30b-a3b", "decode_32k"): ("model",),
+    ("mixtral-8x22b", "decode_32k"): ("model",),
+    ("zamba2-7b", "long_500k"): ("data", "model"),
+    ("zamba2-7b", "decode_32k"): ("model",),
+}
+# Megatron-SP residual sharding for large train cells:
+SEQ_SHARD_TRAIN = {
+    "stablelm-12b", "gemma3-27b", "qwen3-moe-30b-a3b", "mixtral-8x22b",
+}
+# ZeRO-3 (weight FSDP) only where TP-sharded weights do not fit HBM;
+# everything else keeps weights TP-only and shards ONLY the optimizer
+# state over "data" (ZeRO-1) — full-weight all-gathers inside the layer
+# scan cost 10-100x more collective volume than the ZeRO-1 grad
+# reshard (Perf iteration 2 in EXPERIMENTS.md).
+WEIGHT_FSDP_TRAIN = {"mixtral-8x22b"}
+
+
+def _shape_struct(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree,
+        is_leaf=lambda x: x is None)
+
+
+def input_specs(arch: str, shape_name: str,
+                quant: Optional[str] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = registry.get_config(arch)
+    if quant and quant != "none":
+        if quant == "kvq":
+            qc = QuantConfig(mode="none", quantize_kv_cache=True)
+        elif quant == "vp+kvq":
+            qc = QuantConfig(mode="vp", quantize_kv_cache=True)
+        else:
+            qc = QuantConfig(mode=quant)
+        cfg = dataclasses.replace(cfg, quant=qc)
+    sh = registry.SHAPES[shape_name]
+    S, GB, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    if kind == "train" and arch in SEQ_SHARD_TRAIN:
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+    dt = model_dtype(cfg)
+    d = cfg.d_model
+    tok = jax.ShapeDtypeStruct((GB, S), jnp.int32)
+    out: Dict[str, Any] = {"cfg": cfg, "kind": kind}
+
+    if kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (GB, cfg.encoder_seq, d), dt)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (GB, cfg.n_patches, d), dt)
+        out["batch"] = batch
+    elif kind == "prefill":
+        out["tokens"] = tok
+        out["caches"] = jax.eval_shape(
+            lambda: init_cache(cfg, GB, S))
+        if cfg.family == "encdec":
+            KV, dh = cfg.n_kv_heads, cfg.head_dim
+            out["extra"] = (
+                jax.ShapeDtypeStruct(
+                    (cfg.n_layers, GB, cfg.encoder_seq, KV, dh), dt),
+                jax.ShapeDtypeStruct(
+                    (cfg.n_layers, GB, cfg.encoder_seq, KV, dh), dt))
+        elif cfg.family == "vlm":
+            out["extra"] = jax.ShapeDtypeStruct((GB, cfg.n_patches, d), dt)
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((GB, 1), jnp.int32)
+        out["caches"] = jax.eval_shape(
+            lambda: init_cache(cfg, GB, S))
+        if cfg.family == "encdec":
+            KV, dh = cfg.n_kv_heads, cfg.head_dim
+            out["cross_kv"] = (
+                jax.ShapeDtypeStruct(
+                    (cfg.n_layers, GB, cfg.encoder_seq, KV, dh), dt),
+                jax.ShapeDtypeStruct(
+                    (cfg.n_layers, GB, cfg.encoder_seq, KV, dh), dt))
+    return out
+
+
+def params_struct(cfg: ModelConfig, serving: bool):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    if serving and cfg.quant.mode != "none":
+        p = jax.eval_shape(lambda q: quantize_params(q, cfg), p)
+    return p
+
+
+def replicated(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(*([None] * x.ndim))), tree,
+        is_leaf=lambda x: x is None)
+
+
+def build_cell(arch: str, shape_name: str, mesh, quant: Optional[str] = None):
+    """Returns (jitted_fn, arg_structs) ready to .lower()."""
+    spec = input_specs(arch, shape_name, quant)
+    cfg: ModelConfig = spec["cfg"]
+    cfg = dataclasses.replace(
+        cfg,
+        mesh_batch_axes=shd.batch_axes(mesh),
+        mesh_axis_sizes=tuple(dict(mesh.shape).items()))
+    kind = spec["kind"]
+
+    if kind == "train":
+        pstruct = params_struct(cfg, serving=False)
+        ostruct = jax.eval_shape(init_opt_state, pstruct)
+        w_fsdp = arch in WEIGHT_FSDP_TRAIN
+        psh = shd.param_shardings(pstruct, cfg, mesh, fsdp=w_fsdp)
+        osh = type(ostruct)(
+            step=NamedSharding(mesh, P()),
+            mu=shd.param_shardings(ostruct.mu, cfg, mesh, fsdp=True),
+            nu=shd.param_shardings(ostruct.nu, cfg, mesh, fsdp=True),
+        )
+        bsh = shd.batch_shardings(spec["batch"], mesh)
+        fn = make_train_step(cfg, OptConfig())
+        jfn = jax.jit(fn, in_shardings=(psh, osh, bsh))
+        return jfn, (pstruct, ostruct, spec["batch"]), cfg
+
+    serving = True
+    pstruct = params_struct(cfg, serving=serving)
+    # mixtral's TP-only weights (17.6 GB/dev) exceed HBM even at serve
+    # time: keep 2D (data x model) weight sharding there (per-layer
+    # gathers during decode — the price of a 280 GB model on 256 chips).
+    psh = shd.param_shardings(pstruct, cfg, mesh,
+                              fsdp=arch in WEIGHT_FSDP_TRAIN)
+    seq_axes = SEQ_SHARD_CACHE.get((arch, shape_name))
+    csh = shd.cache_shardings(spec["caches"], cfg, mesh, seq_axes=seq_axes)
+
+    if kind == "prefill":
+        fn = make_prefill_step(cfg)
+        tsh = shd.batch_shardings(spec["tokens"], mesh)
+        if "extra" in spec:
+            esh = shd.batch_shardings(spec["extra"], mesh) \
+                if cfg.family == "vlm" else replicated(spec["extra"], mesh)
+            if cfg.family == "encdec":
+                # cross K/V: (L, B, S_enc, KV, dh) -> batch on dim 1
+                ax = shd.batch_axes(mesh)
+                esh = jax.tree_util.tree_map(
+                    lambda x: NamedSharding(
+                        mesh, P(None, ax, None, None, None)), spec["extra"])
+            jfn = jax.jit(fn, in_shardings=(psh, tsh, csh, esh))
+            return jfn, (pstruct, spec["tokens"], spec["caches"],
+                         spec["extra"]), cfg
+        jfn = jax.jit(lambda p, t, c: fn(p, t, c),
+                      in_shardings=(psh, tsh, csh))
+        return jfn, (pstruct, spec["tokens"], spec["caches"]), cfg
+
+    # decode
+    fn = make_serve_step(cfg)
+    tsh = shd.batch_shardings(spec["token"], mesh)
+    if cfg.family == "encdec":
+        ax = shd.batch_axes(mesh)
+        xsh = jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, P(None, ax, None, None, None)),
+            spec["cross_kv"])
+        jfn = jax.jit(fn, in_shardings=(psh, tsh, csh, xsh))
+        return jfn, (pstruct, spec["token"], spec["caches"],
+                     spec["cross_kv"]), cfg
+    jfn = jax.jit(fn, in_shardings=(psh, tsh, csh))
+    return jfn, (pstruct, spec["token"], spec["caches"]), cfg
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes extraction from optimized HLO
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+)\s*=\s*([\w,\[\]{}() ]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum OUTPUT-shape bytes of every collective op, by op kind."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for v in dims.split(","):
+                if v:
+                    n *= int(v)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quant: Optional[str] = None,
+             out_dir: str = "artifacts/dryrun") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        jfn, args, cfg = build_cell(arch, shape_name, mesh, quant)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant": quant or "none",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0))
+        if cost else -1.0,
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", -1),
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{result['mesh']}" + (
+        f"_{quant}" if quant else "")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=2)
+    # Gzipped optimized HLO for the loop-aware roofline analyzer
+    # (compiled.cost_analysis does NOT multiply while-loop bodies by their
+    # trip counts, so benchmarks/hlo_cost.py re-derives FLOPs/bytes/
+    # collective bytes from this text).
+    import gzip
+    with gzip.open(os.path.join(out_dir, tag + ".hlo.txt.gz"), "wt") as f:
+        f.write(hlo)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    choices=list(registry.ARCH_NAMES) + ["all"])
+    ap.add_argument("--shape", default="all",
+                    choices=list(registry.SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "none", "fxp", "vp", "vp_block", "kvq",
+                             "vp+kvq"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_NAMES if args.arch == "all" else [args.arch]
+    ok, fail = 0, 0
+    for arch in archs:
+        shapes = (list(registry.SHAPES) if args.shape == "all"
+                  else [args.shape])
+        for shape in shapes:
+            if (arch, shape) not in registry.cells() and \
+                    shape == "long_500k":
+                print(f"[skip] {arch} x {shape} (full attention @500k)")
+                continue
+            try:
+                r = run_cell(arch, shape, args.multi_pod, args.quant,
+                             args.out)
+                print(f"[ok] {arch} x {shape} x {r['mesh']}: "
+                      f"flops={r['flops']:.3e} "
+                      f"coll={sum(r['collective_bytes'].values()):.3e}B "
+                      f"compile={r['compile_s']}s")
+                ok += 1
+            except Exception as e:
+                print(f"[FAIL] {arch} x {shape}: {type(e).__name__}: "
+                      f"{str(e)[:500]}")
+                fail += 1
+    print(f"dryrun: {ok} ok, {fail} failed")
+    sys.exit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh factory.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+leading "pod" axis is pure data parallelism (DCN-connected pods).
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; `elastic_mesh` builds arbitrary healthy-subset
+meshes for the fault-tolerance path.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def elastic_mesh(pods: int, data: int, model: int):
+    """Mesh for an elastic restart on a reduced healthy set."""
+    if pods > 1:
+        return _mk((pods, data, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))
+
+
+def smoke_mesh():
+    """1-device mesh with production axis names (CPU tests)."""
+    return _mk((1, 1), ("data", "model"))

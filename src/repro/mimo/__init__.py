@@ -1,0 +1,15 @@
+"""The paper's application: beamspace LMMSE equalization for mmWave
+massive MU-MIMO (Sec. III-V)."""
+from .channel import ChannelConfig, generate_channels, awgn, steering
+from .beamspace import dft_matrix, to_beamspace, from_beamspace
+from .lmmse import lmmse_matrix, equalize
+from .equalizer import EqualizerSpec, table1_specs, calibrate, equalize_quantized
+from . import sim, cspade
+
+__all__ = [
+    "ChannelConfig", "generate_channels", "awgn", "steering",
+    "dft_matrix", "to_beamspace", "from_beamspace",
+    "lmmse_matrix", "equalize",
+    "EqualizerSpec", "table1_specs", "calibrate", "equalize_quantized",
+    "sim", "cspade",
+]

@@ -1,0 +1,34 @@
+"""Beamspace transforms (paper eq. 3): y = F ybar, H = F Hbar.
+
+F is the unitary DFT matrix of size B; since F is unitary the beamspace
+system model is statistically equivalent to the antenna-domain one, but
+mmWave LoS channels become approximately sparse in beamspace.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=8)
+def dft_matrix(b: int):
+    """Unitary DFT matrix F (B x B), complex64."""
+    n = jnp.arange(b)
+    f = jnp.exp(-2j * jnp.pi * jnp.outer(n, n) / b) / jnp.sqrt(b)
+    return f.astype(jnp.complex64)
+
+
+def to_beamspace(x, axis: int = -2):
+    """Apply F along the antenna axis (works for (..., B, U) and (..., B))."""
+    b = x.shape[axis]
+    f = dft_matrix(b)
+    return jnp.moveaxis(
+        jnp.tensordot(f, jnp.moveaxis(x, axis, 0), axes=1), 0, axis)
+
+
+def from_beamspace(x, axis: int = -2):
+    b = x.shape[axis]
+    f = dft_matrix(b)
+    return jnp.moveaxis(
+        jnp.tensordot(f.conj().T, jnp.moveaxis(x, axis, 0), axes=1), 0, axis)

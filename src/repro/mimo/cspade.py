@@ -1,0 +1,59 @@
+"""CSPADE sparsity-adaptive thresholding (paper Sec. IV-A, ref. [11]).
+
+A partial product is skipped ("muted") when the magnitudes of BOTH operands
+fall below predetermined thresholds — beamspace W and y are approximately
+sparse, so most partial products qualify and their multipliers see no input
+toggling (dynamic-power saving in the ASIC; tile-skip in the TPU kernel).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def muting_mask(w_plane, y_plane, thresh_w: float, thresh_y: float):
+    """Per-partial-product muting: both real operands below threshold.
+
+    w_plane (..., U, B) and y_plane (..., B) are REAL planes (re or im).
+    Returns bool (..., U, B): True = muted.
+    """
+    quiet_w = jnp.abs(w_plane) < thresh_w
+    quiet_y = (jnp.abs(y_plane) < thresh_y)[..., None, :]
+    return quiet_w & quiet_y
+
+
+def muting_rate(w, y, thresh_w: float, thresh_y: float) -> jnp.ndarray:
+    """Average muting rate over the 4 RMs of each complex multiplier.
+
+    w (..., U, B) complex, y (..., B) complex.  The four real multipliers
+    of a CM consume (wr,yr), (wi,yi), (wr,yi), (wi,yr).
+    """
+    rates = []
+    for wp in (w.real, w.imag):
+        for yp in (y.real, y.imag):
+            rates.append(muting_mask(wp, yp, thresh_w, thresh_y).mean())
+    return jnp.mean(jnp.asarray(rates))
+
+
+def calibrate_thresholds(w, y, target_rate: float = 0.5,
+                         tol: float = 0.02, iters: int = 24
+                         ) -> Tuple[float, float]:
+    """Pick thresholds as a common quantile of |w| and |y| planes hitting a
+    target muting rate (bisection over the quantile)."""
+    import numpy as np
+
+    wabs = np.abs(np.stack([np.asarray(w.real), np.asarray(w.imag)])).ravel()
+    yabs = np.abs(np.stack([np.asarray(y.real), np.asarray(y.imag)])).ravel()
+    lo, hi = 0.0, 1.0
+    for _ in range(iters):
+        q = 0.5 * (lo + hi)
+        tw, ty = float(np.quantile(wabs, q)), float(np.quantile(yabs, q))
+        r = float(muting_rate(w, y, tw, ty))
+        if abs(r - target_rate) < tol:
+            break
+        if r < target_rate:
+            lo = q
+        else:
+            hi = q
+    return tw, ty

@@ -1,0 +1,102 @@
+"""The three MVM equalizer designs (paper Sec. IV, Table I).
+
+  A-FXP: antenna domain, FXP operands  ybar:(7,1)   Wbar:(11,10)
+  B-FXP: beamspace,      FXP operands  y:(9,1)      W:(12,11)
+  B-VP:  beamspace,      VP operands   y:VP(7,[1,-1]) W:VP(7,[11,9,7,6])
+
+Signals are mapped onto the hardware formats by a static AGC gain per
+stream (calibrated once over a Monte-Carlo ensemble, like a designer
+fixing the input scaling), then quantized re/im separately.  Following the
+paper's methodology, quantization is the only error source: the multiply/
+accumulate math runs exactly (VP multiplication is exact by construction;
+accumulators are wide enough).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FXPFormat,
+    VPFormat,
+    fxp_quantize_value,
+    vp_fake_quant,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EqualizerSpec:
+    name: str
+    beamspace: bool
+    y_fxp: FXPFormat
+    w_fxp: FXPFormat
+    y_vp: Optional[VPFormat] = None
+    w_vp: Optional[VPFormat] = None
+    # Static AGC gains (set by `calibrate`).
+    y_gain: float = 1.0
+    w_gain: float = 1.0
+
+    @property
+    def is_vp(self) -> bool:
+        return self.y_vp is not None
+
+
+def table1_specs() -> Tuple[EqualizerSpec, EqualizerSpec, EqualizerSpec]:
+    return (
+        EqualizerSpec("A-FXP", False, FXPFormat(7, 1), FXPFormat(11, 10)),
+        EqualizerSpec("B-FXP", True, FXPFormat(9, 1), FXPFormat(12, 11)),
+        EqualizerSpec("B-VP", True, FXPFormat(9, 1), FXPFormat(12, 11),
+                      VPFormat(7, (1, -1)), VPFormat(7, (11, 9, 7, 6))),
+    )
+
+
+def calibrate(spec: EqualizerSpec, w_samples, y_samples,
+              headroom: float = 0.98) -> EqualizerSpec:
+    """Fix the AGC gains so the calibration ensemble fills the FXP ranges."""
+    import numpy as np
+
+    def gain(x, fmt: FXPFormat):
+        amax = float(np.max(np.abs(
+            np.stack([np.asarray(x.real), np.asarray(x.imag)]))))
+        return headroom * fmt.max / max(amax, 1e-30)
+
+    return dataclasses.replace(
+        spec,
+        y_gain=gain(y_samples, spec.y_fxp),
+        w_gain=gain(w_samples, spec.w_fxp),
+    )
+
+
+def _quant_plane(x, spec_fxp: FXPFormat, spec_vp: Optional[VPFormat]):
+    if spec_vp is None:
+        return fxp_quantize_value(x, spec_fxp)
+    return vp_fake_quant(x, spec_fxp, spec_vp)
+
+
+def quantize_inputs(spec: EqualizerSpec, w, y):
+    """Quantize equalizer inputs onto the design's formats (re/im planes).
+
+    Returns (wq, yq) back in PHYSICAL units (gains divided out), so that
+    s_hat = wq @ yq estimates the unscaled symbols directly.
+    """
+    def q(x, gain, fxp, vp):
+        xr = _quant_plane(x.real * gain, fxp, vp)
+        xi = _quant_plane(x.imag * gain, fxp, vp)
+        return (xr + 1j * xi) / gain
+
+    wq = q(w, spec.w_gain, spec.w_fxp, spec.w_vp)
+    yq = q(y, spec.y_gain, spec.y_fxp, spec.y_vp)
+    return wq, yq
+
+
+def equalize_quantized(spec: EqualizerSpec, w, y):
+    """One equalization s_hat = W y with quantized inputs.
+
+    w (..., U, B) complex, y (..., B) complex — both already in the domain
+    the spec expects (antenna vs beamspace chosen by the caller).
+    """
+    wq, yq = quantize_inputs(spec, w, y)
+    return jnp.einsum("...ub,...b->...u", wq, yq)

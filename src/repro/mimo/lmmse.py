@@ -1,0 +1,23 @@
+"""LMMSE preprocessing and equalization (paper Sec. III).
+
+Preprocessing: W = (H^H H + (N0/Es) I)^-1 H^H   (per channel realization)
+Equalization:  s_hat = W y                       (one MVM per symbol time)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lmmse_matrix(h: jax.Array, n0_over_es: float) -> jax.Array:
+    """W for channel(s) h: (..., B, U) -> (..., U, B)."""
+    hh = jnp.swapaxes(h.conj(), -1, -2)           # (..., U, B)
+    gram = hh @ h                                  # (..., U, U)
+    u = gram.shape[-1]
+    reg = gram + n0_over_es * jnp.eye(u, dtype=gram.dtype)
+    return jnp.linalg.solve(reg, hh)
+
+
+def equalize(w: jax.Array, y: jax.Array) -> jax.Array:
+    """s_hat = W y for batched w (..., U, B), y (..., B)."""
+    return jnp.einsum("...ub,...b->...u", w, y)

@@ -1,0 +1,203 @@
+"""Monte-Carlo NMSE / BER harness (paper Sec. III-A and V).
+
+Reproduces:
+  * Fig. 7: spiky beamspace PDFs (we report kurtosis / dynamic-range stats);
+  * Fig. 8: NMSE vs operand bitwidth, antenna vs beamspace (~1.2-bit gap);
+  * Table I validation: BER of the three quantized designs vs float LMMSE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FXPFormat, fxp_quantize_value
+from .channel import ChannelConfig, generate_channels, awgn
+from .beamspace import to_beamspace
+from .lmmse import lmmse_matrix, equalize
+from .equalizer import EqualizerSpec, calibrate, equalize_quantized
+
+# ---------------------------------------------------------------------------
+# 16-QAM (gray-coded, Es = 1)
+# ---------------------------------------------------------------------------
+
+_QAM_LEVELS = jnp.asarray([-3.0, -1.0, 1.0, 3.0]) / jnp.sqrt(10.0)
+# Gray code for levels [-3,-1,1,3] -> bit pairs (00,01,11,10)
+_GRAY = jnp.asarray([0, 1, 3, 2])
+_INV_GRAY = jnp.asarray([0, 1, 3, 2])  # self-inverse for 2-bit gray
+
+
+def qam16_mod(key, shape):
+    """Random 16-QAM symbols + their bit labels.
+
+    Returns (symbols complex64 `shape`, bits uint8 `shape + (4,)`)."""
+    ki, kq = jax.random.split(key)
+    idx_i = jax.random.randint(ki, shape, 0, 4)
+    idx_q = jax.random.randint(kq, shape, 0, 4)
+    sym = _QAM_LEVELS[idx_i] + 1j * _QAM_LEVELS[idx_q]
+    bits_i = _GRAY[idx_i]
+    bits_q = _GRAY[idx_q]
+    bits = jnp.stack(
+        [(bits_i >> 1) & 1, bits_i & 1, (bits_q >> 1) & 1, bits_q & 1],
+        axis=-1,
+    ).astype(jnp.uint8)
+    return sym.astype(jnp.complex64), bits
+
+
+def qam16_demod_hard(s):
+    """Hard-decision demodulation -> bit labels (shape + (4,))."""
+    def level_idx(x):
+        bounds = jnp.asarray([-2.0, 0.0, 2.0]) / jnp.sqrt(10.0)
+        return jnp.searchsorted(bounds, x[..., None][..., 0])
+
+    idx_i = jnp.clip(level_idx(s.real), 0, 3)
+    idx_q = jnp.clip(level_idx(s.imag), 0, 3)
+    bits_i = _GRAY[idx_i]
+    bits_q = _GRAY[idx_q]
+    return jnp.stack(
+        [(bits_i >> 1) & 1, bits_i & 1, (bits_q >> 1) & 1, bits_q & 1],
+        axis=-1,
+    ).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble generation (channels, receive vectors, LMMSE matrices)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ensemble:
+    h_ant: jax.Array   # (n, B, U) antenna-domain channels
+    h_beam: jax.Array  # (n, B, U)
+    w_ant: jax.Array   # (n, U, B) LMMSE matrices
+    w_beam: jax.Array  # (n, U, B)
+    y_ant: jax.Array   # (n, B) received vectors (one per channel)
+    y_beam: jax.Array  # (n, B)
+    s: jax.Array       # (n, U) transmitted symbols
+    bits: jax.Array    # (n, U, 4)
+    n0: float
+
+
+def make_ensemble(key, cfg: ChannelConfig, n: int, snr_db: float) -> Ensemble:
+    """Paper Sec. III-A: n channels, one 16-QAM receive vector each."""
+    kh, ks, kn = jax.random.split(key, 3)
+    h = generate_channels(kh, cfg, n)
+    # Per-stream SNR with E[|h|^2]~1 per antenna and Es=1: N0 = 10^(-SNR/10).
+    n0 = float(10.0 ** (-snr_db / 10.0))
+    s, bits = qam16_mod(ks, (n, cfg.U))
+    noise = awgn(kn, (n, cfg.B), n0)
+    y = jnp.einsum("nbu,nu->nb", h, s) + noise
+    hb = to_beamspace(h, axis=-2)
+    yb = to_beamspace(y, axis=-1)
+    w = lmmse_matrix(h, n0)
+    wb = lmmse_matrix(hb, n0)
+    return Ensemble(h, hb, w, wb, y, yb, s, bits, n0)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: distribution statistics (spikiness of beamspace signals)
+# ---------------------------------------------------------------------------
+
+def pdf_stats(x) -> Dict[str, float]:
+    """Kurtosis & peak-to-average stats of the real part (paper Fig. 7)."""
+    v = np.asarray(x.real).ravel()
+    v = v / (v.std() + 1e-30)
+    return {
+        "kurtosis": float(np.mean(v**4) - 3.0),
+        "papr_db": float(10 * np.log10(np.max(v**2) / np.mean(v**2))),
+        "frac_below_0p1sigma": float(np.mean(np.abs(v) < 0.1)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: NMSE vs bitwidth
+# ---------------------------------------------------------------------------
+
+def _global_unit_scale(x) -> float:
+    """Single scalar putting re/im of the whole ensemble into (-1, 1)."""
+    amax = float(np.max(np.abs(
+        np.stack([np.asarray(x.real), np.asarray(x.imag)]))))
+    return (1.0 - 1e-6) / max(amax, 1e-30)
+
+
+def nmse_vs_bitwidth(ens: Ensemble, widths: Sequence[int] = range(6, 11)
+                     ) -> Dict[str, Dict[int, float]]:
+    """Quantize (W, W-1)-normalized inputs, NMSE of the dot product (eq. 4).
+
+    Only the INPUTS are quantized; the multiply runs in float — exactly the
+    paper's methodology.
+    """
+    out = {"antenna": {}, "beamspace": {}}
+    for domain, (w, y) in {
+        "antenna": (ens.w_ant, ens.y_ant),
+        "beamspace": (ens.w_beam, ens.y_beam),
+    }.items():
+        gw, gy = _global_unit_scale(w), _global_unit_scale(y)
+        wn, yn = w * gw, y * gy
+        ref = jnp.einsum("nub,nb->nu", wn, yn)
+        den = float(jnp.mean(jnp.abs(ref) ** 2))
+        for W in widths:
+            fmt = FXPFormat(W, W - 1)
+
+            def q(x):
+                return (fxp_quantize_value(x.real, fmt)
+                        + 1j * fxp_quantize_value(x.imag, fmt))
+
+            est = jnp.einsum("nub,nb->nu", q(wn), q(yn))
+            num = float(jnp.mean(jnp.abs(est - ref) ** 2))
+            out[domain][int(W)] = num / den
+    return out
+
+
+def bitwidth_gap(nmse: Dict[str, Dict[int, float]]) -> float:
+    """Horizontal gap (in bits) between the two NMSE curves.
+
+    For each NMSE level reached by the antenna curve, find the (linearly
+    interpolated) bitwidth where the beamspace curve reaches it; average
+    the difference.  Paper: ~1.2 bits.
+    """
+    wa = sorted(nmse["antenna"])
+    la = np.log10([nmse["antenna"][w] for w in wa])
+    lb = np.log10([nmse["beamspace"][w] for w in wa])
+    gaps = []
+    for i, w in enumerate(wa):
+        target = la[i]
+        # find where beamspace curve crosses `target`
+        j = np.searchsorted(-lb, -target)  # lb is decreasing
+        if j == 0 or j >= len(wa):
+            continue
+        frac = (lb[j - 1] - target) / (lb[j - 1] - lb[j] + 1e-30)
+        w_beam = wa[j - 1] + frac * (wa[j] - wa[j - 1])
+        gaps.append(w_beam - w)
+    return float(np.mean(gaps)) if gaps else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# BER: Table I validation
+# ---------------------------------------------------------------------------
+
+def ber_float(ens: Ensemble, beamspace: bool) -> float:
+    w, y = (ens.w_beam, ens.y_beam) if beamspace else (ens.w_ant, ens.y_ant)
+    s_hat = equalize(w, y)
+    bits = qam16_demod_hard(s_hat)
+    return float(jnp.mean(bits != ens.bits))
+
+
+def ber_quantized(ens: Ensemble, spec: EqualizerSpec) -> float:
+    w, y = ((ens.w_beam, ens.y_beam) if spec.beamspace
+            else (ens.w_ant, ens.y_ant))
+    s_hat = equalize_quantized(spec, w, y)
+    bits = qam16_demod_hard(s_hat)
+    return float(jnp.mean(bits != ens.bits))
+
+
+def calibrate_specs(specs, ens: Ensemble):
+    """Calibrate AGC gains of each design on the ensemble."""
+    out = []
+    for spec in specs:
+        w, y = ((ens.w_beam, ens.y_beam) if spec.beamspace
+                else (ens.w_ant, ens.y_ant))
+        out.append(calibrate(spec, w, y))
+    return out

@@ -1,0 +1,12 @@
+"""Architecture zoo: all assigned model families, VP-quantizable end to end."""
+from .model import (
+    init_params, loss_fn, prefill, decode_step, init_cache,
+    quantize_params, layer_groups, model_dtype,
+)
+from . import layers, attention, mlp, moe, mamba2, rwkv6, model
+
+__all__ = [
+    "init_params", "loss_fn", "prefill", "decode_step", "init_cache",
+    "quantize_params", "layer_groups", "model_dtype",
+    "layers", "attention", "mlp", "moe", "mamba2", "rwkv6", "model",
+]

@@ -1,0 +1,323 @@
+"""Attention: GQA with RoPE/qk-norm, flash-style chunked softmax, KV cache.
+
+Training/prefill use a "pair-scan flash" implementation: the (q-chunk,
+k-chunk) pairs that can contribute under the mask (causal triangle, local
+band, or full rectangle) are enumerated STATICALLY, and a single lax.scan
+walks the pair list carrying running (max, denom, acc).  This gives
+  * bounded peak memory (one q-chunk x k-chunk score block at a time),
+  * exact mask-aware FLOPs (no wasted upper-triangle compute),
+  * one compiled body regardless of sequence length.
+
+Decode attends a single query against the (optionally VP-quantized) cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import FXPFormat, VPFormat, default_vp_format
+from repro.kernels import ref as kref
+from .layers import qdot, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    """Largest divisor of s that is <= target."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _chunk_pairs(n_q: int, n_k: int, pattern: str, window_chunks: int):
+    """Static list of contributing (qi, ki) chunk pairs."""
+    pairs = []
+    for qi in range(n_q):
+        for ki in range(n_k):
+            if pattern == "causal" and ki > qi:
+                continue
+            if pattern == "local" and (ki > qi or qi - ki > window_chunks):
+                continue
+            pairs.append((qi, ki))
+    return pairs
+
+
+def flash_attention(
+    q, k, v,
+    pattern: str = "causal",
+    window: Optional[int] = None,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """q (B, Sq, H, dh), k/v (B, Sk, KV, dh) -> (B, Sq, H, dh).
+
+    GQA: H must be a multiple of KV; k/v heads are repeated logically via
+    reshape (no materialized repeat).
+    pattern: causal | local (banded causal) | full (encoder/cross).
+    Causal/local require Sq == Sk.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else dh ** -0.5
+    c = _pick_chunk(Sq, chunk)
+    ck = _pick_chunk(Sk, chunk)
+    if pattern in ("causal", "local"):
+        assert Sq == Sk
+        ck = c
+    nq, nk = Sq // c, Sk // ck
+    wc = max(1, (window or Sq) // c) if pattern == "local" else nk
+    pairs = _chunk_pairs(nq, nk, pattern, wc)
+    pair_arr = jnp.asarray(pairs, jnp.int32)  # (P, 2)
+
+    # Layout: (B, KV, G, nq, c, dh) for q; (B, KV, nk, ck, dh) for k/v.
+    qr = q.reshape(B, Sq, KV, G, dh).transpose(0, 2, 3, 1, 4)
+    qr = qr.reshape(B, KV, G, nq, c, dh) * scale
+    kr = k.transpose(0, 2, 1, 3).reshape(B, KV, nk, ck, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B, KV, nk, ck, dh)
+
+    q_off = jnp.arange(c, dtype=jnp.int32)
+    k_off = jnp.arange(ck, dtype=jnp.int32)
+
+    def step(carry, pair):
+        m, l, acc = carry                        # running stats per q pos
+        qi, ki = pair[0], pair[1]
+        qb = jax.lax.dynamic_index_in_dim(qr, qi, axis=3, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kr, ki, axis=2, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vr, ki, axis=2, keepdims=False)
+        # scores (B, KV, G, c, ck) — operands stay bf16 (halves the
+        # SP-gather bytes), accumulation in f32 (MXU-native)
+        s = jnp.einsum(
+            "bkgqd,bkcd->bkgqc", qb, kb,
+            preferred_element_type=jnp.float32)
+        if pattern in ("causal", "local"):
+            q_pos = qi * c + q_off[:, None]
+            k_pos = ki * ck + k_off[None, :]
+            mask = k_pos <= q_pos
+            if pattern == "local" and window:
+                mask &= q_pos - k_pos < window
+            s = jnp.where(mask, s, NEG_INF)
+        # online softmax update for q chunk qi
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 3, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 3, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 3, keepdims=False)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_old, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + jnp.sum(p, axis=-1)
+        a_new = a_old * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 3)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 3)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 3)
+        return (m, l, acc), None
+
+    init = (
+        jnp.full((B, KV, G, nq, c), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G, nq, c), jnp.float32),
+        jnp.zeros((B, KV, G, nq, c, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, pair_arr)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, KV, G, Sq, dh).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (optionally VP-quantized) + decode attention
+# ---------------------------------------------------------------------------
+
+def kv_cache_formats(q: QuantConfig):
+    fxp = FXPFormat(q.W, q.W - 1)
+    vp = default_vp_format(fxp, q.M, q.E)
+    return fxp, vp
+
+
+def quantize_kv(x, q: QuantConfig):
+    """bf16 KV block -> (int8 significand, PACKED uint8 index) planes +
+    pow2 scale: 8 + E bits/element of cache traffic instead of 16.
+
+    The E-bit exponent indices pack 8//E per byte along the head dim;
+    per-position pow2 scale keeps VP exactness."""
+    from repro.core.vp_tensor import pack_indices
+
+    fxp, vp = kv_cache_formats(q)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1),
+                   keepdims=True)
+    s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
+    m, i = kref.vp_quant_ref(x.astype(jnp.float32) / s, fxp, vp)
+    if vp.E and x.shape[-1] % (8 // vp.E) == 0:
+        i = pack_indices(i, vp.E)
+    return m, i, s.astype(jnp.float32)
+
+
+def dequantize_kv(m, i, s, q: QuantConfig, dtype):
+    from repro.core.vp_tensor import unpack_indices
+
+    _, vp = kv_cache_formats(q)
+    if i.shape[-1] != m.shape[-1]:
+        i = unpack_indices(i, vp.E, m.shape[-1])
+    return (kref.vp_dequant_ref(m, i, vp, jnp.float32) * s).astype(dtype)
+
+
+def decode_attention(
+    q, k_cache, v_cache, cache_len,
+    window: Optional[int] = None,
+    rolling: bool = False,
+) -> jax.Array:
+    """Single-token decode: q (B, 1, H, dh), caches (B, Smax, KV, dh).
+
+    Masks positions >= cache_len (and outside the sliding window if given).
+    `rolling`: the buffer IS the window (SWA ring buffer) — every slot
+    written so far is valid, no window masking by absolute position.
+    """
+    B, _, H, dh = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    kr = k_cache.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vr = v_cache.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qr, kr)
+    pos = jnp.arange(Smax)[None, :]
+    if rolling:
+        valid = pos < jnp.minimum(cache_len, Smax)[:, None]
+    else:
+        valid = pos < cache_len[:, None]
+        if window:
+            valid &= pos >= (cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, vr)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + norms + rope + flash/decode)
+# ---------------------------------------------------------------------------
+
+def attn_block(
+    x, params, cfg: ModelConfig,
+    positions,
+    pattern: str,
+    window: Optional[int],
+    cache: Optional[dict] = None,
+    train: bool = False,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    """Self/cross attention block.
+
+    cache: {"k": (B, Smax, KV, dh)[ or VP planes], "v": ..., "len": (B,)}
+    -> returns (out, new_cache).  kv_override supplies precomputed
+    encoder K/V for cross-attention.
+    """
+    q_cfg = cfg.quant
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    qp = qdot(x, params["wq"], q_cfg, train)
+    if params.get("bq") is not None:
+        qp = qp + params["bq"].astype(qp.dtype)
+    qp = qp.reshape(*x.shape[:-1], H, dh)
+
+    if kv_override is None:
+        kp = qdot(x, params["wk"], q_cfg, train)
+        vp_ = qdot(x, params["wv"], q_cfg, train)
+        if params.get("bk") is not None:
+            kp = kp + params["bk"].astype(kp.dtype)
+            vp_ = vp_ + params["bv"].astype(vp_.dtype)
+        kp = kp.reshape(*x.shape[:-1], KV, dh)
+        vp_ = vp_.reshape(*x.shape[:-1], KV, dh)
+    else:
+        kp, vp_ = kv_override
+
+    if cfg.qk_norm:
+        qp = rms_norm(qp, params["q_norm"])
+        kp = rms_norm(kp, params["k_norm"]) if kv_override is None else kp
+
+    if positions is not None and kv_override is None:
+        qp = rope(qp, positions, cfg.rope_theta)
+        kp = rope(kp, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_override is None and x.shape[1] > 1:
+        # PREFILL: full causal pass over the prompt, then write all S
+        # positions into the cache in one shot.
+        S = x.shape[1]
+        smax = (cache["k"] if "k" in cache else cache["k_m"]).shape[1]
+        out = flash_attention(qp, kp, vp_, pattern=pattern, window=window)
+        kw, vw = kp, vp_
+        if S > smax:  # ring buffer shorter than prompt: keep the tail,
+            # arranged so slot j holds position p with p % smax == j (the
+            # decode writer uses len % smax).
+            kw = jnp.roll(kp[:, -smax:], S % smax, axis=1)
+            vw = jnp.roll(vp_[:, -smax:], S % smax, axis=1)
+        pad = smax - kw.shape[1]
+        if pad:
+            kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if "k_m" in cache:
+            m_k, i_k, s_k = quantize_kv(kw, q_cfg)
+            m_v, i_v, s_v = quantize_kv(vw, q_cfg)
+            new_cache = dict(
+                k_m=m_k, k_i=i_k, k_s=s_k, v_m=m_v, v_i=i_v, v_s=s_v,
+                len=cache["len"] + S)
+        else:
+            new_cache = dict(k=kw.astype(cache["k"].dtype),
+                             v=vw.astype(cache["v"].dtype),
+                             len=cache["len"] + S)
+        out = out.reshape(*x.shape[:-1], H * dh)
+        return qdot(out, params["wo"], q_cfg, train), new_cache
+    if cache is not None and kv_override is None:
+        # Decode: append this step's K/V.  A buffer no longer than the
+        # sliding window acts as a ring buffer (long-context SWA decode).
+        smax = (cache["k"] if "k" in cache else cache["k_m"]).shape[1]
+        rolling = window is not None and smax <= window
+        idx = cache["len"]  # (B,)
+        widx = idx % smax if rolling else idx
+        upd = lambda buf, val: jax.vmap(
+            lambda b, v, j: jax.lax.dynamic_update_slice_in_dim(
+                b, v, j, axis=0))(buf, val, widx)
+        if "k_m" in cache:  # VP-quantized cache
+            m_k, i_k, s_k = quantize_kv(kp, q_cfg)
+            m_v, i_v, s_v = quantize_kv(vp_, q_cfg)
+            new_cache = dict(
+                k_m=upd(cache["k_m"], m_k), k_i=upd(cache["k_i"], i_k),
+                k_s=upd(cache["k_s"], s_k),
+                v_m=upd(cache["v_m"], m_v), v_i=upd(cache["v_i"], i_v),
+                v_s=upd(cache["v_s"], s_v),
+                len=idx + kp.shape[1],
+            )
+            k_full = dequantize_kv(
+                new_cache["k_m"], new_cache["k_i"], new_cache["k_s"],
+                q_cfg, kp.dtype)
+            v_full = dequantize_kv(
+                new_cache["v_m"], new_cache["v_i"], new_cache["v_s"],
+                q_cfg, vp_.dtype)
+        else:
+            new_cache = dict(
+                k=upd(cache["k"], kp), v=upd(cache["v"], vp_),
+                len=idx + kp.shape[1],
+            )
+            k_full, v_full = new_cache["k"], new_cache["v"]
+        out = decode_attention(
+            qp, k_full, v_full, new_cache["len"], window, rolling=rolling)
+    elif kv_override is not None:
+        if qp.shape[1] == 1:
+            # Cross-attention during decode: full-length source.
+            src_len = jnp.full((B,), kp.shape[1], jnp.int32)
+            out = decode_attention(qp, kp, vp_, src_len)
+        else:
+            out = flash_attention(qp, kp, vp_, pattern="full")
+    else:
+        out = flash_attention(qp, kp, vp_, pattern=pattern, window=window)
+
+    out = out.reshape(*x.shape[:-1], H * dh)
+    out = qdot(out, params["wo"], q_cfg, train)
+    return out, new_cache

@@ -1,0 +1,208 @@
+"""Quantization-aware building blocks.
+
+Every weight matmul in every architecture routes through `qdot`, which
+dispatches on the model's QuantConfig:
+
+  none      x @ W                          (bf16/f32 baseline)
+  fxp       x @ (int8 W * 2^-F)            (plain fixed-point baseline)
+  vp        x @ vp_dequant(m, i) * s       (paper-faithful: int8 significand
+                                            + PACKED 2-bit index planes in
+                                            the param pytree -> the dry-run's
+                                            HLO bytes show the 8.25-bit
+                                            weight traffic)
+  vp_block  block_vp_matmul(xq, Wq)        (beyond-paper: int8 MXU matmuls,
+                                            LUT scales; activations are
+                                            dynamically block-VP quantized)
+
+Training uses float master weights with an STE fake-quant (QAT); the
+quantized representations are produced by `quantize_params` at
+serving/checkpoint-export time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FXPFormat,
+    VPFormat,
+    default_vp_format,
+    vp_fake_quant_ste,
+    block_vp_quantize,
+)
+from repro.core.vp_tensor import pack_indices, unpack_indices
+from repro.configs.base import QuantConfig
+from repro.kernels import ops as kops
+
+
+# Canonical quantization grid: weights are pre-normalized to (-1, 1) by a
+# power-of-two per-tensor scale, then quantized on this fixed grid.  Static
+# formats keep VP semantics exact and jit-friendly.
+def canonical_formats(q: QuantConfig):
+    fxp = FXPFormat(q.W, q.W - 1)
+    vp = default_vp_format(fxp, q.M, q.E)
+    return fxp, vp
+
+
+def _pow2_scale(w) -> jax.Array:
+    """Smallest power of two >= max|w| (keeps normalized w in (-1, 1))."""
+    amax = jnp.max(jnp.abs(w))
+    return jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (export-time transform)
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: jax.Array, q: QuantConfig) -> Dict[str, jax.Array]:
+    """Convert a float weight matrix (d_in, d_out) to its serving form."""
+    fxp, vp = canonical_formats(q)
+    if q.mode == "none":
+        return {"w": w}
+    s = _pow2_scale(w)
+    wn = w / s
+    if q.mode == "fxp":
+        m = jnp.clip(jnp.round(wn * 127.0), -128, 127).astype(jnp.int8)
+        return {"m": m, "scale": (s / 127.0).astype(jnp.float32)}
+    if q.mode == "vp":
+        m, i = kops.vp_quant(wn.astype(jnp.float32), fxp, vp)
+        d_in = w.shape[0]
+        pad = (-d_in) % (8 // vp.E) if vp.E else 0
+        if pad:
+            i = jnp.pad(i, ((0, pad),) + ((0, 0),) * (w.ndim - 1))
+        ip = pack_indices(jnp.moveaxis(i, 0, -1), vp.E)
+        return {
+            "m": m,
+            "i_packed": jnp.moveaxis(ip, -1, 0),
+            "scale": s.astype(jnp.float32),
+        }
+    if q.mode == "vp_block":
+        if w.shape[0] % q.block:
+            # contraction dim not tileable (e.g. embedding tables indexed
+            # by vocab): fall back to per-element VP planes
+            return quantize_weight(w, dataclasses_replace_mode(q, "vp"))
+        m, i_blk = block_vp_quantize(
+            wn.astype(jnp.float32), fxp, vp, block=q.block, axis=0)
+        return {"m": m, "i_blk": i_blk, "scale": s.astype(jnp.float32)}
+    raise ValueError(q.mode)
+
+
+def dataclasses_replace_mode(q: QuantConfig, mode: str) -> QuantConfig:
+    import dataclasses
+
+    return dataclasses.replace(q, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# The quantization-aware matmul
+# ---------------------------------------------------------------------------
+
+def _dequant_vp_weight(wq: Dict[str, jax.Array], q: QuantConfig, dtype):
+    fxp, vp = canonical_formats(q)
+    m = wq["m"]
+    d_in = m.shape[0]
+    per = 8 // vp.E if vp.E else 1
+    ip = jnp.moveaxis(wq["i_packed"], 0, -1)
+    i = unpack_indices(ip, vp.E, ip.shape[-1] * per)
+    i = jnp.moveaxis(i, -1, 0)[:d_in]
+    scales = jnp.asarray([2.0 ** (-fk) for fk in vp.f], dtype)
+    return m.astype(dtype) * scales[i.astype(jnp.int32)] * wq["scale"].astype(dtype)
+
+
+def qdot(x: jax.Array, wq: Any, q: QuantConfig,
+         train: bool = False) -> jax.Array:
+    """x (..., d_in) @ W (d_in, d_out) under the quantization mode.
+
+    `wq` is a float array (training / mode none) or the dict produced by
+    `quantize_weight` (serving).
+    """
+    dtype = x.dtype
+    if isinstance(wq, jax.Array) or not isinstance(wq, dict):
+        w = wq
+        if train and q.mode in ("vp", "vp_block"):
+            fxp, vp = canonical_formats(q)
+            s = _pow2_scale(jax.lax.stop_gradient(w))
+            w = vp_fake_quant_ste(w / s, fxp, vp) * s
+        return jnp.dot(x, w.astype(dtype))
+    if q.mode == "fxp":
+        w = wq["m"].astype(dtype) * wq["scale"].astype(dtype)
+        return jnp.dot(x, w)
+    if q.mode == "vp":
+        w = _dequant_vp_weight(wq, q, dtype)
+        return jnp.dot(x, w)
+    if q.mode == "vp_block":
+        fxp, vp = canonical_formats(q)
+        lead = x.shape[:-1]
+        d_in = x.shape[-1]
+        x2 = x.reshape(-1, d_in).astype(jnp.float32)
+        # Dynamic per-tensor pow2 scale for activations, then block-VP.
+        sa = _pow2_scale(jax.lax.stop_gradient(x2))
+        a_m, a_i = block_vp_quantize(x2 / sa, fxp, vp, block=q.block, axis=-1)
+        out = kops.block_vp_matmul(
+            a_m, a_i, wq["m"], wq["i_blk"], vp, vp, bk=q.block,
+            blocks=(256, q.block, 256))
+        out = out * (sa * wq["scale"]).astype(out.dtype)
+        return out.reshape(*lead, -1).astype(dtype)
+    raise ValueError(q.mode)
+
+
+def qdense(x, params: Dict[str, Any], q: QuantConfig, train: bool = False):
+    """Dense layer: params = {"w": array-or-quantdict, "b": optional}."""
+    y = qdot(x, params["w"], q, train)
+    if params.get("b") is not None:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms / positional encodings / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma + beta).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding: x (..., S, H, dh), positions (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions (..., S) -> angles (..., S, 1, half) broadcasting over heads
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(tokens, table, q: QuantConfig, train: bool = False):
+    """Token embedding; table may be quantized like any other weight.
+
+    Dispatches on the dict KEYS (a vp_block model may carry a per-element
+    VP embedding when the vocab is not tileable)."""
+    if isinstance(table, dict):
+        if "i_packed" in table:
+            w = _dequant_vp_weight(table, q, jnp.float32)
+        elif "i_blk" in table:
+            _, vp = canonical_formats(q)
+            w = block_vp_dequantize(
+                table["m"], table["i_blk"], vp, q.block, axis=0,
+                dtype=jnp.float32) * table["scale"]
+        else:
+            w = table["m"].astype(jnp.float32) * table["scale"]
+        return jnp.take(w, tokens, axis=0)
+    return jnp.take(table, tokens, axis=0)

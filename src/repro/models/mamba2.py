@@ -1,0 +1,157 @@
+"""Mamba2 (SSD) layer: chunked state-space-dual scan for training/prefill,
+O(1)-state recurrence for decode.
+
+Structure follows the Mamba2 block: fused input projection producing
+(z, x, B, C, dt), short causal depthwise conv over (x, B, C), per-head
+scalar decay A, SSD with headdim P and state N, skip D, gated RMSNorm,
+output projection.  All projections route through `qdot` (VP-quantizable).
+
+The chunked SSD is numerically safe by construction: every exponential is
+of a NON-POSITIVE cumulative-decay difference (scalar per-head decay), so
+factors live in (0, 1].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import qdot, rms_norm
+
+D_CONV = 4  # short-conv width
+
+
+def mamba2_dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_nheads
+    p = cfg.ssm_headdim
+    conv_dim = di + 2 * n
+    proj_dim = 2 * di + 2 * n + h
+    return di, n, h, p, conv_dim, proj_dim
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, C), w (D_CONV, C)."""
+    pad = jnp.pad(x, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, t: t + x.shape[1], :] * w[t][None, None, :]
+        for t in range(D_CONV))
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(xdt, dA, b, c, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xdt (B, S, H, P) inputs pre-multiplied by dt; dA (B, S, H) per-head log
+    decay increments (<= 0); b/c (B, S, N) (single SSM group).
+    Returns (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    B, S, H, P = xdt.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:       # largest divisor of S <= chunk
+        Q -= 1
+    nc = S // Q
+
+    xdt = xdt.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dA = dA.reshape(B, nc, Q, H).astype(jnp.float32)
+    b = b.reshape(B, nc, Q, N).astype(jnp.float32)
+    c = c.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(h, inp):
+        x_c, dA_c, b_c, c_c = inp
+        cum = jnp.cumsum(dA_c, axis=1)                      # (B, Q, H)
+        # inter-chunk: y1[t] = exp(cum_t) * C_t . h
+        y1 = jnp.einsum("bqn,bhpn->bqhp", c_c, h) * jnp.exp(cum)[..., None]
+        # intra-chunk
+        g = jnp.einsum("bqn,bkn->bqk", c_c, b_c)            # (B, Q, Q)
+        ldec = jnp.exp(
+            jnp.where(tri[None, :, :, None],
+                      cum[:, :, None, :] - cum[:, None, :, :], -jnp.inf))
+        y2 = jnp.einsum("bqk,bqkh,bkhp->bqhp", g, ldec, x_c)
+        # state update
+        dec_rem = jnp.exp(cum[:, -1:, :] - cum)             # (B, Q, H)
+        h = (h * jnp.exp(cum[:, -1])[:, :, None, None]
+             + jnp.einsum("bqn,bqhp,bqh->bhpn", b_c, x_c, dec_rem))
+        return h, y1 + y2
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        step, h0,
+        (xdt.transpose(1, 0, 2, 3, 4), dA.transpose(1, 0, 2, 3),
+         b.transpose(1, 0, 2, 3), c.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, h_fin
+
+
+def mamba2_block(
+    x, params, cfg: ModelConfig,
+    state: Optional[dict] = None,
+    train: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x (B, S, d) -> (B, S, d).  `state` (decode): {"h", "conv"}."""
+    q = cfg.quant
+    B, S, d = x.shape
+    di, n, h, p, conv_dim, _ = mamba2_dims(cfg)
+
+    # Separate projections (instead of one fused w_in) so TP sharding of
+    # the d_inner dimension never crosses the z/x/B/C/dt boundaries.
+    z = qdot(x, params["w_z"], q, train)
+    xin = qdot(x, params["w_x"], q, train)
+    bc = qdot(x, params["w_bc"], q, train)
+    dt = qdot(x, params["w_dt"], q, train)
+    b, c = jnp.split(bc, [n], axis=-1)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+
+    new_state = None
+    prefill = state is not None and S > 1
+    if state is None or prefill:
+        xbc_raw = xbc
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        if prefill:
+            tail = xbc_raw[:, -(D_CONV - 1):]
+            pad = (D_CONV - 1) - tail.shape[1]
+            if pad:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_conv = tail
+    else:
+        # decode: roll the conv cache (B, D_CONV-1, conv_dim)
+        hist = jnp.concatenate([state["conv"], xbc], axis=1)
+        xbc = (jnp.einsum(
+            "btc,tc->bc", hist, params["conv_w"]) + params["conv_b"])[:, None]
+        new_conv = hist[:, 1:]
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"])          # (B, S, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (H,)
+    dA = dt * a                                              # <= 0
+    xh = xin.reshape(B, S, h, p).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+
+    if state is None or prefill:
+        h0 = state["h"] if prefill else None
+        y, h_fin = _ssd_chunked(xdt, dA, b, c, cfg.ssm_chunk, h0=h0)
+        if prefill:
+            new_state = {"h": h_fin, "conv": new_conv}
+    else:
+        # single-step recurrence
+        h_prev = state["h"]
+        dec = jnp.exp(dA[:, 0])                              # (B, H)
+        h_fin = (h_prev * dec[..., None, None]
+                 + jnp.einsum("bn,bhp->bhpn", b[:, 0], xdt[:, 0]))
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0], h_fin)[:, None]
+        new_state = {"h": h_fin, "conv": new_conv}
+
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["out_norm"])
+    return qdot(y, params["w_out"], q, train), new_state

@@ -1,0 +1,23 @@
+"""Feed-forward blocks: SwiGLU (LM default) and GELU (whisper-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from .layers import qdot
+
+
+def swiglu(x, params, q: QuantConfig, train: bool = False):
+    """params: w_gate (d, ff), w_up (d, ff), w_down (ff, d)."""
+    g = qdot(x, params["w_gate"], q, train)
+    u = qdot(x, params["w_up"], q, train)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return qdot(h, params["w_down"], q, train)
+
+
+def gelu_mlp(x, params, q: QuantConfig, train: bool = False):
+    """params: w_in (d, ff), b_in, w_out (ff, d), b_out."""
+    h = qdot(x, params["w_in"], q, train) + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return qdot(h, params["w_out"], q, train) + params["b_out"].astype(x.dtype)

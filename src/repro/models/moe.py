@@ -1,0 +1,144 @@
+"""Mixture-of-Experts with top-k token-choice routing (sort-based dispatch).
+
+The dispatch is the sort-based capacity form used by production systems:
+tokens' (token, expert) assignments are sorted by expert, positions within
+each expert computed by a cumulative count, entries beyond the per-expert
+capacity dropped, and tokens scattered into an (E, C, d) buffer.  Under
+pjit with the expert axis sharded over "model", the gather/scatter lowers
+to the expected all-to-all pattern (expert parallelism).
+
+Aux losses: load-balance (Switch-style) + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from .layers import qdot
+
+
+def router_probs(x, w_router, q: QuantConfig):
+    """Softmax router logits in f32 (T, E)."""
+    logits = qdot(x.astype(jnp.float32), w_router, QuantConfig("none"))
+    return logits, jax.nn.softmax(logits, axis=-1)
+
+
+def _moe_group_count(T: int, target: int = 4096) -> int:
+    """Number of dispatch groups: ~`target` tokens each, dividing T."""
+    g = max(1, T // target)
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe_block(
+    x, params, cfg: ModelConfig,
+    capacity_factor: float = 1.25,
+    train: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, S, d) -> (B, S, d), aux losses.
+
+    params: w_router (d, E); experts {w_gate, w_up, w_down} stacked (E, ...).
+
+    Dispatch is GROUP-LOCAL (MaxText-style): tokens are split into groups
+    of ~4k, each group sorts its own (token, expert) assignments and fills
+    a per-group per-expert capacity buffer.  Groups shard over the
+    data/sequence axes, so the sort never crosses devices; the expert
+    einsum against EP-sharded weights produces the all-to-all.
+    """
+    q = cfg.quant
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    G = _moe_group_count(T)
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+
+    logits, probs = router_probs(xt, params["w_router"], q)   # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (over the full router distribution) ----
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32),
+        axis=(0, 1))
+    aux = {
+        "load_balance": E * jnp.sum(me * ce),
+        "router_z": jnp.mean(
+            jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+
+    # ---- group-local sort-based dispatch with capacity ----
+    C = int(max(1, round(Tg * k / E * capacity_factor)))
+    flat_expert = expert_idx.reshape(G, Tg * k)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k))
+    flat_gate = gate_vals.reshape(G, Tg * k)
+    order = jnp.argsort(flat_expert, axis=-1)                 # per group
+    se = jnp.take_along_axis(flat_expert, order, -1)
+    stok = jnp.take_along_axis(flat_token, order, -1)
+    sg = jnp.take_along_axis(flat_gate, order, -1)
+    # position within expert = index - start offset of that expert
+    one_hot_counts = jax.vmap(
+        lambda e: jnp.bincount(e, length=E))(se)              # (G, E)
+    starts = jnp.cumsum(one_hot_counts, -1) - one_hot_counts
+    pos = jnp.arange(Tg * k)[None] - jnp.take_along_axis(starts, se, -1)
+    keep = pos < C
+
+    def scatter_group(xg, se_g, stok_g, pos_g, keep_g):
+        buf = jnp.zeros((E, C, d), x.dtype)
+        vals = jnp.where(keep_g[:, None], xg[stok_g], 0).astype(x.dtype)
+        return buf.at[se_g, jnp.where(keep_g, pos_g, 0)].add(vals)
+
+    buf = jax.vmap(scatter_group)(xt, se, stok, pos, keep)    # (G, E, C, d)
+
+    # ---- expert FFNs: einsum over EP-sharded weights ----
+    def ffn(h):  # h (G, E, C, d)
+        g = jnp.einsum("gecd,edf->gecf", h, _w(params["w_gate"], q, h.dtype))
+        u = jnp.einsum("gecd,edf->gecf", h, _w(params["w_up"], q, h.dtype))
+        act = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+        return jnp.einsum("gecf,efd->gecd", act,
+                          _w(params["w_down"], q, h.dtype))
+
+    out_buf = ffn(buf)
+
+    # ---- combine: gather back and weight by gates ----
+    def combine_group(ob, se_g, stok_g, pos_g, keep_g, sg_g):
+        gathered = ob[se_g, jnp.where(keep_g, pos_g, 0)]      # (Tg*k, d)
+        gathered = jnp.where(keep_g[:, None], gathered, 0.0)
+        out = jnp.zeros((Tg, d), jnp.float32)
+        return out.at[stok_g].add(
+            gathered.astype(jnp.float32) * sg_g[:, None])
+
+    combined = jax.vmap(combine_group)(out_buf, se, stok, pos, keep, sg)
+    return combined.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _w(wq, q: QuantConfig, dtype):
+    """Materialize a (possibly quantized) stacked expert weight for einsum."""
+    if not isinstance(wq, dict):
+        return wq.astype(dtype)
+    scale = jnp.asarray(wq["scale"], dtype).reshape(
+        (-1,) + (1,) * (wq["m"].ndim - 1))
+    if "i_packed" in wq:      # per-element VP planes
+        from .layers import _dequant_vp_weight
+        return jax.vmap(
+            lambda m, i: _dequant_vp_weight(
+                {"m": m, "i_packed": i,
+                 "scale": jnp.ones((), jnp.float32)}, q, dtype)
+        )(wq["m"], wq["i_packed"]) * scale
+    if "i_blk" in wq:         # block VP
+        from .layers import canonical_formats
+        from repro.core import block_vp_dequantize
+        _, vp = canonical_formats(q)
+        deq = jax.vmap(
+            lambda m, i: block_vp_dequantize(m, i, vp, q.block, axis=0,
+                                             dtype=dtype)
+        )(wq["m"], wq["i_blk"])
+        return deq * scale
+    return wq["m"].astype(dtype) * scale

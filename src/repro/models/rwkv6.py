@@ -1,0 +1,143 @@
+"""RWKV6 ("Finch") layer: data-dependent per-channel decay linear attention.
+
+TimeMix: token-shift lerp -> R/K/V/G projections + low-rank data-dependent
+decay w_t = exp(-exp(w0 + tanh(x W_a) W_b)); per-head WKV recurrence
+  S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+  y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+computed CHUNKWISE (chunk 16) so all exponentials stay within f32 range:
+log-decays are clamped to [-LOG_W_MIN, ~0], so the largest positive
+exponent is chunk * LOG_W_MIN = 64 -> exp() ~ 6e27 < f32 max.
+
+ChannelMix: token-shift + squared-ReLU FFN with receptance gate.
+All projections route through `qdot` (VP-quantizable).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import qdot, rms_norm
+
+CHUNK = 16
+LOG_W_MIN = 4.0  # decay clamp: log w in [-4, -1e-4]
+HEAD_DIM = 64
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} stream; `last` (B, 1, d) carries x_{t-1} across steps."""
+    if last is not None:
+        return jnp.concatenate([last, x[:, :-1]], axis=1)
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _wkv_chunked(r, k, v, logw, u, s0=None):
+    """Chunked WKV6.  r/k/v/logw (B, S, H, N); u (H, N).
+
+    Returns (y (B, S, H, N), s_final (B, H, N, N))."""
+    B, S, H, N = r.shape
+    Q = min(CHUNK, S)
+    while S % Q:       # largest divisor of S <= CHUNK
+        Q -= 1
+    nc = S // Q
+    f32 = jnp.float32
+    r, k, v, logw = (t.reshape(B, nc, Q, H, N).astype(f32)
+                     for t in (r, k, v, logw))
+    tri_strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    eye = jnp.eye(Q, dtype=bool)
+
+    def step(s, inp):
+        r_c, k_c, v_c, lw_c = inp                     # (B, Q, H, N)
+        cum = jnp.cumsum(lw_c, axis=1)                # inclusive
+        ecum = cum - lw_c                             # exclusive
+        r_dec = r_c * jnp.exp(ecum)                   # bounded <= |r|
+        k_grow = k_c * jnp.exp(-cum)                  # bounded by exp(Q*4)
+        # inter-chunk: y1[t] = (r_t * exp(ecum_t)) . S
+        y1 = jnp.einsum("bqhn,bhnp->bqhp", r_dec, s)
+        # intra-chunk: strict-lower attention + diagonal bonus
+        att = jnp.einsum("bqhn,bkhn->bqkh", r_dec, k_grow)
+        att = jnp.where(tri_strict[None, :, :, None], att, 0.0)
+        diag = jnp.einsum("bqhn,bqhn->bqh", r_c * u[None, None], k_c)
+        att = att + diag[:, :, None, :] * eye[None, :, :, None]
+        y2 = jnp.einsum("bqkh,bkhp->bqhp", att, v_c)
+        # state update
+        dec_all = jnp.exp(cum[:, -1])                 # (B, H, N)
+        k_rem = k_c * jnp.exp(cum[:, -1:] - cum)      # (B, Q, H, N)
+        s = (s * dec_all[..., None]
+             + jnp.einsum("bqhn,bqhp->bhnp", k_rem, v_c))
+        return s, y1 + y2
+
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), f32)
+    s_fin, ys = jax.lax.scan(
+        step, s0, tuple(t.transpose(1, 0, 2, 3, 4) for t in (r, k, v, logw)))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N), s_fin
+
+
+def rwkv6_time_mix(
+    x, params, cfg: ModelConfig,
+    state: Optional[dict] = None,
+    train: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x (B, S, d) -> (B, S, d).  state (decode): {"s", "last"}."""
+    q = cfg.quant
+    B, S, d = x.shape
+    H, N = d // HEAD_DIM, HEAD_DIM
+
+    last = state["last_tm"] if state is not None else None
+    xx = _token_shift(x, last[:, None] if last is not None else None) - x
+    mix = lambda name: x + xx * params[f"mu_{name}"][None, None, :]
+
+    r = qdot(mix("r"), params["w_r"], q, train).reshape(B, S, H, N)
+    k = qdot(mix("k"), params["w_k"], q, train).reshape(B, S, H, N)
+    v = qdot(mix("v"), params["w_v"], q, train).reshape(B, S, H, N)
+    g = qdot(mix("g"), params["w_g"], q, train)
+    # data-dependent decay (low-rank)
+    wlora = jnp.tanh(mix("w") @ params["w_dec_a"]) @ params["w_dec_b"]
+    logw = -jnp.exp(
+        params["w_dec0"][None, None, :] + wlora.astype(jnp.float32))
+    logw = jnp.clip(logw, -LOG_W_MIN, -1e-4).reshape(B, S, H, N)
+
+    if state is None or S > 1:
+        s0 = state["s"] if state is not None else None
+        y, s_fin = _wkv_chunked(r, k, v, logw, params["u_bonus"], s0=s0)
+        new_state = (None if state is None
+                     else {"s": s_fin, "last_tm": x[:, -1]})
+    else:
+        s_prev = state["s"]
+        r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+        lw1 = logw[:, 0]
+        y = (jnp.einsum("bhn,bhnp->bhp", r1, s_prev)
+             + jnp.einsum("bhn,bhn,bhp->bhp",
+                          r1 * params["u_bonus"][None], k1, v1))[:, None]
+        s_fin = (s_prev * jnp.exp(lw1)[..., None]
+                 + jnp.einsum("bhn,bhp->bhnp", k1, v1))
+        new_state = {"s": s_fin, "last_tm": x[:, -1]}
+
+    # per-head groupnorm (normalize each head's N channels), then gate
+    y4 = y.reshape(B, S, H, N)
+    y4 = rms_norm(y4, params["ln_x"].reshape(H, N))
+    y = y4.reshape(B, S, d)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return qdot(y.astype(x.dtype), params["w_o"], q, train), new_state
+
+
+def rwkv6_channel_mix(
+    x, params, cfg: ModelConfig,
+    state: Optional[dict] = None,
+    train: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    q = cfg.quant
+    last = state["last_cm"] if state is not None else None
+    xx = _token_shift(x, last[:, None] if last is not None else None) - x
+    xk = x + xx * params["mu_ck"][None, None, :]
+    xr = x + xx * params["mu_cr"][None, None, :]
+    kk = qdot(xk, params["w_ck"], q, train)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid(
+        qdot(xr, params["w_cr"], q, train).astype(jnp.float32)).astype(x.dtype)
+    out = rr * qdot(kk, params["w_cv"], q, train)
+    new_state = {"last_cm": x[:, -1]} if state is not None else None
+    return out, new_state

@@ -1,0 +1,1 @@
+from .optimizer import OptConfig, OptState, init_opt_state, apply_updates, schedule, global_norm

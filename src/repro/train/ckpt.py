@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing: atomic, async, resumable.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, plus <dir>/LATEST
+(written via temp-file + os.replace, so a crash mid-write can never
+corrupt an existing checkpoint).  Arrays are saved host-side (fully
+addressable); restore reshards onto the current mesh — which is how
+ELASTIC restarts work: a checkpoint taken on 512 devices restores onto
+any mesh whose axes divide the array shapes.
+
+Async mode hands the device->host copy + serialization to a background
+thread; `wait()` joins before the next save (single outstanding save).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_with_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten_with_paths(v, f"{prefix}/{i}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_like(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}/{k}" if prefix else str(k))
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        seq = [_unflatten_like(v, flat, f"{prefix}/{i}")
+               for i, v in enumerate(template)]
+        return type(template)(seq) if isinstance(template, tuple) else seq
+    if template is None:
+        return None
+    return flat[prefix]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None):
+        """state: pytree of arrays. extra: JSON-serializable metadata
+        (data-pipeline position, RNG, mesh shape...)."""
+        flat = _flatten_with_paths(state)
+        # device->host copy happens here (synchronously cheap on CPU,
+        # overlapped DMA on TPU); serialization goes to the worker thread.
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        self.wait()
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "extra": extra or {},
+                "n_arrays": len(host),
+                "bytes": int(sum(a.nbytes for a in host.values())),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            # atomic LATEST pointer
+            ptr_tmp = os.path.join(self.dir, ".LATEST.tmp")
+            with open(ptr_tmp, "w") as f:
+                f.write(str(step))
+            os.replace(ptr_tmp, os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                # only completed checkpoints (manifest present)
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "LATEST")
+        if os.path.exists(ptr):
+            with open(ptr) as f:
+                s = int(f.read().strip())
+            if s in self.all_steps():
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Restore into the structure of `template`, placing shards onto
+        the current mesh via `shardings` (elastic re-mesh restore)."""
+        self.wait()
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, manifest

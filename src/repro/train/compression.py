@@ -1,0 +1,43 @@
+"""Error-feedback int8 gradient compression (DP-axis bandwidth saver).
+
+Each gradient leaf is quantized to int8 with a per-leaf scale BEFORE the
+data-parallel all-reduce; the quantization residual is carried in the
+compressor state and added back next step (error feedback), which keeps
+SGD convergence (the compressor is a contraction).  Interestingly this is
+the VP idea applied to gradients: high-dynamic-range values, short
+significand, scale recovered from side information.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_compressor_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g, err):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def compress_decompress(grads, state) -> Tuple[Any, Any]:
+    """Quantize-dequantize every leaf with error feedback.
+
+    Under pjit the int8 representation is what crosses the DP axis (XLA
+    reduces the dequantized values; on real fleets this pairs with
+    reduce-scatter in int8 — here we model the numerics exactly)."""
+    if state is None:
+        state = init_compressor_state(grads)
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(state)
+    outs = [_compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))

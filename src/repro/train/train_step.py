@@ -1,0 +1,90 @@
+"""Training / serving step builders (the functions the launcher jits).
+
+`make_train_step` supports gradient (micro)accumulation: the global batch
+is split into microbatches scanned sequentially; the parameter update
+happens once per step.  With DP-sharded microbatches XLA overlaps the
+gradient all-reduce of microbatch i with the compute of i+1 (the standard
+latency-hiding pattern).  Optional error-feedback int8 gradient
+compression plugs into the DP reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn, decode_step, prefill
+from repro.optim.optimizer import OptConfig, OptState, apply_updates
+from .compression import compress_decompress
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    microbatches: int = 1,
+                    compress_grads: bool = False):
+    """Returns train_step(params, opt_state, batch[, cmp_state]) ->
+    (params, opt_state, metrics[, cmp_state])."""
+
+    def grad_one(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb, cfg, True)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: OptState, batch,
+                   cmp_state=None):
+        if microbatches == 1:
+            loss, metrics, grads = grad_one(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = grad_one(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, loss
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(body, zero, mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = {"ce": loss}
+        if compress_grads:
+            grads, cmp_state = compress_decompress(grads, cmp_state)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        if compress_grads:
+            return params, opt_state, metrics, cmp_state
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One batched decode step: (params, token, caches) -> (logits, caches).
+
+    encdec models additionally take precomputed cross K/V."""
+
+    if cfg.family == "encdec":
+        def serve_step(params, token, caches, cross_kv):
+            return decode_step(params, token, caches, cfg, cross_kv=cross_kv)
+        return serve_step
+
+    def serve_step(params, token, caches):
+        return decode_step(params, token, caches, cfg)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, caches, extra=None):
+        return prefill(params, tokens, caches, cfg, patches=extra)
+    return prefill_step

@@ -1,0 +1,217 @@
+"""Bit-exactness and invariant tests for the core VP format.
+
+The arithmetic fxp2vp implementation must be bit-identical to the paper's
+Fig. 3 circuit (MSB-equality + LOD + bit-window mux), which we implement
+literally in `fxp2vp_bitwindow`.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FXPFormat,
+    VPFormat,
+    product_format,
+    default_vp_format,
+    fxp_quantize,
+    fxp_to_float,
+    fxp2vp,
+    fxp2vp_bitwindow,
+    vp2fxp,
+    vp_to_float,
+    vp_mul,
+    vp_mul_to_fxp,
+    product_scale_lut,
+    pack_indices,
+    unpack_indices,
+)
+
+# The paper's own formats (Table I + figures).
+PAPER_CASES = [
+    (FXPFormat(8, 1), VPFormat(6, (1, -1))),          # Fig. 2
+    (FXPFormat(9, 1), VPFormat(7, (1, -1))),          # Table I, y
+    (FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))),  # Table I, W
+    # Fig. 4 uses list [3,1,2,0]; that order is legal for VP2FXP but FXP2VP's
+    # LOD requires descending (Sec. II-C), so we test the sorted variant.
+    (FXPFormat(12, 3), VPFormat(9, (3, 2, 1, 0))),
+]
+
+
+def all_raw_values(fxp):
+    return jnp.arange(fxp.raw_min, fxp.raw_max + 1, dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("fxp,vp", PAPER_CASES)
+def test_fxp2vp_matches_bitwindow_oracle(fxp, vp):
+    """Arithmetic conversion == literal paper circuit, for EVERY input."""
+    raw = all_raw_values(fxp)
+    m_a, i_a = fxp2vp(raw, fxp, vp)
+    m_b, i_b = fxp2vp_bitwindow(raw, fxp, vp)
+    np.testing.assert_array_equal(np.asarray(m_a), np.asarray(m_b))
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+
+
+@pytest.mark.parametrize("fxp,vp", PAPER_CASES)
+def test_significand_in_range_and_no_overflow(fxp, vp):
+    raw = all_raw_values(fxp)
+    m, i, ovf = fxp2vp(raw, fxp, vp, return_overflow=True)
+    m, i, ovf = np.asarray(m), np.asarray(i), np.asarray(ovf)
+    assert m.min() >= vp.raw_min and m.max() <= vp.raw_max
+    assert i.min() >= 0 and i.max() < vp.K
+    if fxp.W - fxp.F == vp.M - vp.min_f and fxp.F >= vp.max_f:
+        # Sec. II-D no-overflow condition holds -> nothing saturates.
+        assert not ovf.any()
+
+
+@pytest.mark.parametrize("fxp,vp", PAPER_CASES)
+def test_precision_loss_bound(fxp, vp):
+    """|x - VP(x)| < 2^-f_i (truncation drops LSBs below the selected point),
+    and conversion is EXACT whenever the value fits at the selected f_i."""
+    raw = all_raw_values(fxp)
+    m, i = fxp2vp(raw, fxp, vp)
+    x = np.asarray(fxp_to_float(raw, fxp, jnp.float64))
+    xq = np.asarray(vp_to_float(m, i, vp, jnp.float64))
+    f_sel = np.asarray([vp.f[k] for k in np.asarray(i)])
+    err = np.abs(x - xq)
+    assert (err < 2.0 ** (-f_sel) + 1e-12).all()
+    # Values with few significant bits are exact.
+    small = np.abs(np.asarray(raw)) <= vp.raw_max
+    if fxp.F <= vp.max_f:
+        assert (err[small] == 0).all()
+
+
+@pytest.mark.parametrize("fxp,vp", PAPER_CASES)
+def test_greedy_precision_is_optimal(fxp, vp):
+    """The LOD picks the LARGEST f_i that avoids overflow => the error is
+    minimal among all valid exponent options."""
+    raw = np.asarray(all_raw_values(fxp))
+    m, i = map(np.asarray, fxp2vp(raw, fxp, vp))
+    x = raw * 2.0 ** (-fxp.F)
+    best = np.full_like(x, np.inf)
+    for k, fk in enumerate(vp.f):
+        s = fxp.F - fk
+        mk = raw >> s if s >= 0 else raw << (-s)
+        valid = (mk >= vp.raw_min) & (mk <= vp.raw_max)
+        errk = np.abs(mk * 2.0 ** (-fk) - x)
+        best = np.where(valid, np.minimum(best, errk), best)
+    got = np.abs(m * 2.0 ** (-np.asarray([vp.f[k] for k in i])) - x)
+    np.testing.assert_allclose(got, best, atol=1e-12)
+
+
+def test_paper_fig2_examples():
+    """Fig. 2: FXP(8,1) -> VP(6,[1,-1]).
+
+    Case 1: 00101100_2 with F=1 => value 22.0 -> 3 equal MSBs? bits are
+    0,0,1 -> not all equal -> i=1, upper 6 bits 001011 = 11 -> 11*2^1 = 22. OK
+    Case 2: 11110011_2 (two's complement -13 raw) F=1 => -6.5 -> MSBs 1,1,1
+    equal -> i=0, lower 6 bits 110011 = -13 -> -13*2^-1 = -6.5 exactly.
+    """
+    fxp, vp = FXPFormat(8, 1), VPFormat(6, (1, -1))
+    raw = jnp.asarray([44, -13], jnp.int32)  # 00101100, 11110011
+    m, i = fxp2vp(raw, fxp, vp)
+    np.testing.assert_array_equal(np.asarray(i), [1, 0])
+    np.testing.assert_array_equal(np.asarray(m), [11, -13])
+    np.testing.assert_allclose(
+        np.asarray(vp_to_float(m, i, vp)), [22.0, -6.5])
+
+
+@pytest.mark.parametrize("fxp,vp", PAPER_CASES)
+def test_vp2fxp_roundtrip_exact_when_wide_enough(fxp, vp):
+    """VP -> FXP back onto the original grid loses nothing beyond the FXP2VP
+    truncation: converting the VP value to FXP(W,F) reproduces the VP value
+    exactly when F >= all selected f_i."""
+    raw = all_raw_values(fxp)
+    m, i = fxp2vp(raw, fxp, vp)
+    back = vp2fxp(m, i, vp, fxp)
+    x_vp = np.asarray(vp_to_float(m, i, vp, jnp.float64))
+    x_back = np.asarray(fxp_to_float(back, fxp, jnp.float64))
+    if fxp.F >= vp.max_f:
+        np.testing.assert_allclose(x_back, x_vp, atol=1e-12)
+
+
+@given(
+    W=st.integers(6, 16),
+    M=st.integers(4, 10),
+    E=st.integers(0, 3),
+    F_off=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_random_formats_bitexact(W, M, E, F_off, seed):
+    """Hypothesis sweep: arbitrary legal formats, arithmetic == bit circuit."""
+    if M >= W:
+        return
+    F = W - 1 - F_off
+    fxp = FXPFormat(W, F)
+    try:
+        vp = default_vp_format(fxp, M, E)
+    except ValueError:
+        return
+    rng = np.random.default_rng(seed)
+    raw = jnp.asarray(
+        rng.integers(fxp.raw_min, fxp.raw_max + 1, size=256), jnp.int32)
+    m_a, i_a = fxp2vp(raw, fxp, vp)
+    m_b, i_b = fxp2vp_bitwindow(raw, fxp, vp)
+    np.testing.assert_array_equal(np.asarray(m_a), np.asarray(m_b))
+    np.testing.assert_array_equal(np.asarray(i_a), np.asarray(i_b))
+
+
+def test_vp_mul_exact():
+    """VP multiply == real-value multiply, exactly, for full operand sweeps."""
+    fy, vy = FXPFormat(9, 1), VPFormat(7, (1, -1))
+    fw, vw = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+    rng = np.random.default_rng(0)
+    ra = jnp.asarray(rng.integers(fy.raw_min, fy.raw_max + 1, 512), jnp.int32)
+    rb = jnp.asarray(rng.integers(fw.raw_min, fw.raw_max + 1, 512), jnp.int32)
+    ma, ia = fxp2vp(ra, fy, vy)
+    mb, ib = fxp2vp(rb, fw, vw)
+    mp, ip, pfmt = vp_mul(ma, ia, vy, mb, ib, vw)
+    want = np.asarray(vp_to_float(ma, ia, vy, jnp.float64)) * np.asarray(
+        vp_to_float(mb, ib, vw, jnp.float64))
+    got = np.asarray(vp_to_float(mp, ip, pfmt, jnp.float64))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    # Product significand respects the (Ma+Mb-1)-bit bound.
+    assert np.abs(np.asarray(mp)).max() <= 2 ** (pfmt.M - 1)
+    # LUT path agrees.
+    lut = np.asarray(product_scale_lut(vy, vw, jnp.float64))
+    np.testing.assert_allclose(np.asarray(mp) * lut[np.asarray(ip)], want)
+
+
+def test_vp_mul_to_fxp_matches_float_path():
+    fy, vy = FXPFormat(9, 1), VPFormat(7, (1, -1))
+    fw, vw = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+    out = FXPFormat(24, 12)
+    rng = np.random.default_rng(1)
+    ra = jnp.asarray(rng.integers(fy.raw_min, fy.raw_max + 1, 256), jnp.int32)
+    rb = jnp.asarray(rng.integers(fw.raw_min, fw.raw_max + 1, 256), jnp.int32)
+    ma, ia = fxp2vp(ra, fy, vy)
+    mb, ib = fxp2vp(rb, fw, vw)
+    raw_out = vp_mul_to_fxp(ma, ia, vy, mb, ib, vw, out)
+    exact = np.asarray(vp_to_float(ma, ia, vy, jnp.float64)) * np.asarray(
+        vp_to_float(mb, ib, vw, jnp.float64))
+    got = np.asarray(fxp_to_float(raw_out, out, jnp.float64))
+    # out has F=12 >= max product fractional length is 22 -> truncation to
+    # 2^-12 grid.
+    assert np.max(np.abs(got - exact)) < 2.0 ** (-out.F) + 1e-12
+
+
+@given(E=st.sampled_from([1, 2, 4]), n_blocks=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_index_packing_roundtrip(E, n_blocks, seed):
+    per = 8 // E
+    n = per * n_blocks
+    rng = np.random.default_rng(seed)
+    i = jnp.asarray(rng.integers(0, 1 << E, size=(3, n)), jnp.uint8)
+    packed = pack_indices(i, E)
+    assert packed.shape == (3, n // per)
+    un = unpack_indices(packed, E, n)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(i))
+
+
+def test_product_format_pairwise_sums():
+    a, b = VPFormat(7, (1, -1)), VPFormat(7, (11, 9, 7, 6))
+    p = product_format(a, b)
+    assert p.M == 13
+    assert p.f == (12, 10, 8, 7, 10, 8, 6, 5)

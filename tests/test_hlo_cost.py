@@ -1,0 +1,75 @@
+"""Loop-aware HLO cost parser: validate against programs with known FLOPs."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, ".")
+from benchmarks import hlo_cost  # noqa: E402
+
+
+def _flops_of(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.total_costs(comp.as_text())
+
+
+def test_plain_dot():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    c = _flops_of(lambda w, x: x @ w, w, x)
+    expect = 2 * 32 * 256 * 256
+    assert abs(c["flops"] - expect) / expect < 0.05
+
+
+def test_scan_multiplies_trip_count():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=17)
+        return h
+
+    c = _flops_of(f, w, x)
+    expect = 2 * 32 * 256 * 256 * 17
+    assert c["flops"] >= expect
+    assert c["flops"] < expect * 1.2
+
+
+def test_nested_scans_multiply():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+
+    def f(w, x):
+        def outer(h, _):
+            def inner(h2, _):
+                return h2 @ w, None
+            h2, _ = jax.lax.scan(inner, h, None, length=5)
+            return jnp.tanh(h2), None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h
+
+    c = _flops_of(f, w, x)
+    expect = 2 * 16 * 128 * 128 * 15
+    assert c["flops"] >= expect
+    assert c["flops"] < expect * 1.2
+
+
+def test_dus_not_counted_as_full_buffer():
+    """dynamic-update-slice traffic ~ the update, not the aliased buffer."""
+    buf = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    upd = jax.ShapeDtypeStruct((1, 1024), jnp.float32)
+
+    def f(buf, upd):
+        def body(b, i):
+            return jax.lax.dynamic_update_slice(b, upd * 1.0, (i, 0)), None
+        b, _ = jax.lax.scan(body, buf, jnp.arange(64))
+        return b
+
+    c = _flops_of(f, buf, upd)
+    # aliasing heuristic: the carried 4MB buffer is counted once per trip
+    # at most (in-place fused DUS), not operand+result twice
+    assert c["hbm_bytes"] <= 64 * (1024 * 1024 * 4 + 64 * 4096 * 4), \
+        c["hbm_bytes"]

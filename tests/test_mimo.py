@@ -1,0 +1,121 @@
+"""MIMO application tests: statistical reproduction of the paper's claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.mimo import (
+    ChannelConfig, generate_channels, dft_matrix, to_beamspace,
+    lmmse_matrix, equalize, table1_specs,
+)
+from repro.mimo.sim import (
+    make_ensemble, pdf_stats, nmse_vs_bitwidth, bitwidth_gap,
+    ber_float, ber_quantized, calibrate_specs, qam16_mod, qam16_demod_hard,
+)
+from repro.mimo import cspade
+
+
+@pytest.fixture(scope="module")
+def ensemble():
+    return make_ensemble(
+        jax.random.PRNGKey(0), ChannelConfig(), 1500, snr_db=20.0)
+
+
+@pytest.fixture(scope="module")
+def ensemble_low_snr():
+    return make_ensemble(
+        jax.random.PRNGKey(7), ChannelConfig(), 4000, snr_db=2.0)
+
+
+def test_dft_unitary():
+    f = dft_matrix(64)
+    np.testing.assert_allclose(
+        np.asarray(f @ f.conj().T), np.eye(64), atol=1e-5)
+
+
+def test_qam_roundtrip():
+    s, bits = qam16_mod(jax.random.PRNGKey(3), (512,))
+    np.testing.assert_array_equal(
+        np.asarray(qam16_demod_hard(s)), np.asarray(bits))
+    # unit average energy
+    assert abs(float(jnp.mean(jnp.abs(s) ** 2)) - 1.0) < 0.05
+
+
+def test_channel_normalization(ensemble):
+    # E[|h_bu|^2] ~ 1 per entry
+    p = float(jnp.mean(jnp.abs(ensemble.h_ant) ** 2))
+    assert 0.8 < p < 1.2, p
+
+
+def test_beamspace_statistically_equivalent(ensemble):
+    """Unitary F => float equalization identical in both domains (eq. 3)."""
+    s_ant = equalize(ensemble.w_ant, ensemble.y_ant)
+    s_beam = equalize(ensemble.w_beam, ensemble.y_beam)
+    np.testing.assert_allclose(
+        np.asarray(s_ant), np.asarray(s_beam), atol=2e-3)
+
+
+def test_fig7_beamspace_is_spiky(ensemble):
+    """Beamspace signals have much heavier tails (higher kurtosis/PAPR)."""
+    k_y_ant = pdf_stats(ensemble.y_ant)["kurtosis"]
+    k_y_beam = pdf_stats(ensemble.y_beam)["kurtosis"]
+    k_w_ant = pdf_stats(ensemble.w_ant)["kurtosis"]
+    k_w_beam = pdf_stats(ensemble.w_beam)["kurtosis"]
+    assert k_y_beam > k_y_ant + 3
+    assert k_w_beam > k_w_ant + 20
+
+
+def test_fig8_nmse_monotone_and_gap(ensemble):
+    """NMSE halves ~4x per bit; beamspace needs ~1 extra bit (paper: 1.2)."""
+    nm = nmse_vs_bitwidth(ensemble)
+    for dom in ("antenna", "beamspace"):
+        vals = [nm[dom][w] for w in sorted(nm[dom])]
+        assert all(a > b for a, b in zip(vals, vals[1:]))  # monotone down
+    for w in nm["antenna"]:
+        assert nm["beamspace"][w] > nm["antenna"][w]       # beamspace worse
+    gap = bitwidth_gap(nm)
+    assert 0.5 < gap < 2.0, gap  # paper: ~1.2 ("1-to-2 bits" in Sec. IV-C)
+
+
+def test_table1_ber_no_visible_gap(ensemble_low_snr):
+    """BER of each quantized design tracks float LMMSE (paper Sec. IV-C)."""
+    ens = ensemble_low_snr
+    specs = calibrate_specs(table1_specs(), ens)
+    ref_ant = ber_float(ens, False)
+    ref_beam = ber_float(ens, True)
+    assert ref_beam > 1e-3  # measurable BER at this SNR
+    for spec in specs:
+        ref = ref_beam if spec.beamspace else ref_ant
+        got = ber_quantized(ens, spec)
+        # "no visible gap": within 15% relative of the float BER.
+        assert got < ref * 1.15 + 1e-4, (spec.name, got, ref)
+
+
+def test_bvp_matches_bfxp_accuracy(ensemble_low_snr):
+    """The headline: 7-bit-significand VP matches the 9/12-bit FXP design."""
+    ens = ensemble_low_snr
+    specs = {s.name: s for s in calibrate_specs(table1_specs(), ens)}
+    ber_bfxp = ber_quantized(ens, specs["B-FXP"])
+    ber_bvp = ber_quantized(ens, specs["B-VP"])
+    assert ber_bvp < ber_bfxp * 1.1 + 1e-4, (ber_bvp, ber_bfxp)
+
+
+def test_cspade_muting_rate_and_calibration(ensemble):
+    w, y = ensemble.w_beam, ensemble.y_beam
+    tw, ty = cspade.calibrate_thresholds(w, y, target_rate=0.5)
+    r = float(cspade.muting_rate(w, y, tw, ty))
+    assert 0.4 < r < 0.6, r
+    # Beamspace mutes far more than antenna domain at the same thresholds
+    # would for its own calibrated 50% point — sanity: antenna-domain rate
+    # with beamspace thresholds differs strongly from 0.5.
+    r_ant = float(cspade.muting_rate(ensemble.w_ant, ensemble.y_ant, tw, ty))
+    assert abs(r_ant - r) > 0.05
+
+
+def test_lmmse_identity_high_snr():
+    """With tiny noise, W ~ pseudo-inverse: W H ~ I."""
+    h = generate_channels(jax.random.PRNGKey(5), ChannelConfig(), 8)
+    w = lmmse_matrix(h, 1e-6)
+    prod = np.asarray(w @ h)
+    eye = np.broadcast_to(np.eye(8), prod.shape)
+    np.testing.assert_allclose(prod, eye, atol=1e-2)

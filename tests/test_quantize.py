@@ -1,0 +1,103 @@
+"""Tensor-level quantization API: VPTensor round trips, block-VP
+invariants, STE gradients, per-layer weight quantization."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FXPFormat, VPFormat, default_vp_format,
+    vp_quantize, vp_dequantize, vp_fake_quant, vp_fake_quant_ste,
+    block_vp_quantize, block_vp_dequantize,
+)
+from repro.configs.base import QuantConfig
+from repro.models.layers import quantize_weight, qdot, canonical_formats
+
+FXP, VP = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+
+
+def hdr(shape, seed, scale=0.5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        np.clip(rng.standard_t(2, shape), -10, 10) * scale * 0.09,
+        jnp.float32)
+
+
+def test_vptensor_roundtrip_matches_fake_quant():
+    x = hdr((64, 128), 0)
+    t = vp_quantize(x, FXP, VP)
+    np.testing.assert_array_equal(
+        np.asarray(vp_dequantize(t)), np.asarray(vp_fake_quant(x, FXP, VP)))
+
+
+def test_vptensor_storage_dtypes():
+    t = vp_quantize(hdr((32, 32), 1), FXP, VP)
+    assert t.m.dtype == jnp.int8
+    assert t.i.dtype == jnp.uint8
+    assert int(jnp.max(t.i)) < VP.K
+
+
+@given(seed=st.integers(0, 1000), M=st.sampled_from([5, 7, 9]),
+       E=st.sampled_from([1, 2]))
+@settings(max_examples=20, deadline=None)
+def test_property_fake_quant_error_bound(seed, M, E):
+    """Quantize-dequantize error is bounded by the LOCAL resolution
+    2^-f_sel at every element (truncation), never more."""
+    vp = default_vp_format(FXP, M, E)
+    x = hdr((256,), seed)
+    from repro.core import fxp_quantize, fxp2vp
+    raw = fxp_quantize(x, FXP)
+    m, i = fxp2vp(raw, FXP, vp)
+    xq = np.asarray(vp_fake_quant(x, FXP, vp))
+    xr = np.asarray(raw, np.float64) * 2.0 ** -FXP.F  # FXP-rounded x
+    f_sel = np.asarray([vp.f[k] for k in np.asarray(i)])
+    assert (np.abs(xq - xr) < 2.0 ** (-f_sel) + 1e-9).all()
+
+
+def test_block_vp_no_overflow_and_error():
+    x = hdr((16, 512), 3)
+    m, i_blk = block_vp_quantize(x, FXP, VP, block=128, axis=-1)
+    assert np.abs(np.asarray(m)).max() <= VP.raw_max
+    back = block_vp_dequantize(m, i_blk, VP, block=128, axis=-1)
+    rel = float(jnp.linalg.norm(back - x) / jnp.linalg.norm(x))
+    assert rel < 0.15, rel
+    # block index = max of per-element indices in the block (BFP rule)
+    from repro.core import fxp_quantize, fxp2vp
+    _, i_elt = fxp2vp(fxp_quantize(x, FXP), FXP, VP)
+    i_max = np.asarray(i_elt).reshape(16, 4, 128).max(-1)
+    np.testing.assert_array_equal(np.asarray(i_blk), i_max)
+
+
+def test_ste_gradient_is_identity():
+    x = hdr((64,), 4)
+    g = jax.grad(lambda v: jnp.sum(vp_fake_quant_ste(v, FXP, VP) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["fxp", "vp", "vp_block"])
+def test_quantize_weight_qdot_consistency(mode):
+    """quantize_weight + qdot approximates the float matmul for every
+    serving mode, with mode-appropriate tolerance."""
+    q = QuantConfig(mode=mode, block=64)
+    w = hdr((128, 96), 5, scale=0.3)
+    x = hdr((8, 128), 6, scale=2.0)
+    wq = quantize_weight(w, q)
+    got = np.asarray(qdot(x, wq, q))
+    want = np.asarray(x @ w)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    tol = {"fxp": 0.05, "vp": 0.05, "vp_block": 0.15}[mode]
+    assert rel < tol, (mode, rel)
+
+
+def test_vp_weight_storage_is_packed():
+    """Serving representation: int8 significands + PACKED index plane
+    (4 indices/byte for E=2) => ~8.25 bits/element."""
+    q = QuantConfig(mode="vp")
+    w = hdr((256, 64), 7)
+    wq = quantize_weight(w, q)
+    assert wq["m"].dtype == jnp.int8 and wq["m"].shape == (256, 64)
+    assert wq["i_packed"].dtype == jnp.uint8
+    assert wq["i_packed"].shape == (64, 64)  # 256/4 packed along d_in
+    bits = (wq["m"].size * 8 + wq["i_packed"].size * 8) / w.size
+    assert bits <= 10.5, bits

@@ -1,0 +1,198 @@
+"""Substrate integration tests: training loop, checkpoint/restart equality,
+fault tolerance (heartbeats/stragglers/elastic), gradient compression,
+data-pipeline determinism, optimizer behaviour."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.optim import OptConfig, init_opt_state, apply_updates, schedule
+from repro.train import (
+    make_train_step, CheckpointManager, FaultToleranceController, FTConfig,
+    run_with_restarts, compress_decompress, init_compressor_state,
+)
+from repro.data import DataConfig, DataState, SyntheticLM
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                  dtype="float32")
+OPT = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def _setup():
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return params, init_opt_state(params)
+
+
+def test_loss_decreases():
+    params, opt = _setup()
+    data = SyntheticLM(DataConfig(vocab=128, seq_len=32, global_batch=8))
+    step = jax.jit(make_train_step(CFG, OPT))
+    losses = []
+    for i in range(30):
+        params, opt, m = step(params, opt, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_checkpoint_restart_bitexact():
+    """Training N steps == training k, checkpoint, restore, train N-k."""
+    data = SyntheticLM(DataConfig(vocab=128, seq_len=32, global_batch=8))
+    step = jax.jit(make_train_step(CFG, OPT))
+
+    params, opt = _setup()
+    for i in range(6):
+        params, opt, _ = step(params, opt, data.batch_at(i))
+    direct = params
+
+    params, opt = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        for i in range(3):
+            params, opt, _ = step(params, opt, data.batch_at(i))
+        mgr.save(3, {"params": params, "opt": opt._asdict()},
+                 extra={"data_index": 3})
+        # simulate a crash: fresh state, restore
+        params2, opt2 = _setup()
+        restored, manifest = mgr.restore(
+            3, {"params": params2, "opt": opt2._asdict()})
+        params2 = restored["params"]
+        from repro.optim.optimizer import OptState
+        opt2 = OptState(**restored["opt"])
+        for i in range(manifest["extra"]["data_index"], 6):
+            params2, opt2, _ = step(params2, opt2, data.batch_at(i))
+
+    for a, b in zip(jax.tree_util.tree_leaves(direct),
+                    jax.tree_util.tree_leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"x": jnp.ones((4,)) * s})
+        assert mgr.latest_step() == 4
+        assert mgr.all_steps() == [3, 4]  # gc kept last 2
+
+
+def test_ft_heartbeats_and_eviction():
+    ctl = FaultToleranceController(4, FTConfig(dead_after=2))
+    for h in range(4):
+        ctl.heartbeat(h, 1.0)
+    assert ctl.healthy() == [0, 1, 2, 3]
+    # host 2 stops beating
+    for _ in range(3):
+        for h in (0, 1, 3):
+            ctl.heartbeat(h, 1.0)
+        ctl.tick()
+    assert 2 not in ctl.healthy()
+    assert ctl.topology_changed([0, 1, 2, 3])
+
+
+def test_ft_straggler_detection():
+    ctl = FaultToleranceController(4, FTConfig(straggler_factor=2.0))
+    for _ in range(12):
+        for h in range(4):
+            ctl.heartbeat(h, 5.0 if h == 1 else 1.0)
+        ctl.tick()
+    assert 1 not in ctl.healthy()
+    assert 0 in ctl.healthy()
+
+
+def test_ft_elastic_mesh_proposal():
+    ctl = FaultToleranceController(8)
+    for h in range(8):
+        ctl.heartbeat(h, 1.0)
+    # lose 3 of 8 hosts (each 64 chips): 5*64 = 320 chips, model=16
+    for h in (5, 6, 7):
+        ctl.hosts[h].alive = False
+    pods, data, model = ctl.propose_mesh(chips_per_host=64, model_axis=16)
+    assert model == 16
+    assert pods * data * model <= 320
+    assert data & (data - 1) == 0  # power of two
+
+
+def test_run_with_restarts():
+    calls = []
+
+    def loop(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("simulated node failure")
+        return "done"
+
+    assert run_with_restarts(loop, max_restarts=3) == "done"
+    assert calls == [0, 1, 2]
+
+
+def test_compression_error_feedback_contraction():
+    """Error feedback keeps the cumulative compression error bounded."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_t(3, size=(64, 64)), jnp.float32)}
+    state = init_compressor_state(g)
+    total_err = []
+    acc_true = np.zeros((64, 64))
+    acc_sent = np.zeros((64, 64))
+    for i in range(20):
+        g = {"w": jnp.asarray(rng.standard_t(3, size=(64, 64)) * 0.1,
+                              jnp.float32)}
+        sent, state = compress_decompress(g, state)
+        acc_true += np.asarray(g["w"])
+        acc_sent += np.asarray(sent["w"])
+        total_err.append(np.abs(acc_true - acc_sent).max())
+    # residual carried, cumulative error stays at one-step quantization size
+    assert total_err[-1] < 0.05, total_err[-1]
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_deterministic(seed):
+    cfg = DataConfig(vocab=512, seq_len=16, global_batch=4, seed=seed)
+    a = SyntheticLM(cfg).batch_at(7)
+    b = SyntheticLM(cfg).batch_at(7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_pipeline_host_sharding_partitions():
+    cfg = DataConfig(vocab=512, seq_len=16, global_batch=8)
+    full = SyntheticLM(cfg, host_id=0, n_hosts=1)
+    h0 = SyntheticLM(cfg, host_id=0, n_hosts=2)
+    h1 = SyntheticLM(cfg, host_id=1, n_hosts=2)
+    assert h0.batch_at(0)["tokens"].shape[0] == 4
+    # different hosts generate different data
+    assert not np.array_equal(np.asarray(h0.batch_at(0)["tokens"]),
+                              np.asarray(h1.batch_at(0)["tokens"]))
+
+
+def test_pipeline_resume():
+    cfg = DataConfig(vocab=512, seq_len=16, global_batch=4)
+    pipe = SyntheticLM(cfg)
+    it = pipe.resume_iter(DataState(5))
+    batch, state = next(it)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                  np.asarray(pipe.batch_at(5)["tokens"]))
+    assert state.batch_index == 6
+
+
+def test_schedule_shape():
+    assert float(schedule(OPT, jnp.asarray(0))) < OPT.lr * 0.6
+    peak = float(schedule(OPT, jnp.asarray(OPT.warmup_steps)))
+    assert abs(peak - OPT.lr) / OPT.lr < 1e-5
+    end = float(schedule(OPT, jnp.asarray(OPT.total_steps)))
+    assert abs(end - OPT.lr * OPT.min_lr_frac) / OPT.lr < 1e-5
+
+
+def test_grad_clipping():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    opt = init_opt_state(params)
+    _, _, m = apply_updates(params, grads, opt, OptConfig(clip_norm=1.0))
+    assert float(m["grad_norm"]) > 1.0  # raw norm reported
