@@ -170,6 +170,15 @@ def kernel_bench():
     nmse = float(np.mean((out - want) ** 2) / np.mean(want**2))
     emit("kernel_vp_matmul_512_interp", us, f"nmse_vs_float={nmse:.1e}")
 
+    # Fused quantize+matmul (substrate kernel): float in, no quantized-plane
+    # HBM round-trip; swept over kernel block sizes.
+    for blk in (128, 256, 512):
+        us = _timeit(lambda blocks=(blk, blk, blk): jax.block_until_ready(
+            ops.vp_quant_matmul(a, b, y_fxp, y_vp, w_fxp, w_vp,
+                                blocks=blocks, interpret=True)))
+        emit(f"kernel_vp_quant_matmul_512_b{blk}_interp", us,
+             "fused quant+matmul, one pallas_call (vs quant->HBM->matmul)")
+
     from repro.core import block_vp_quantize
     am, ai = block_vp_quantize(a / 16, y_fxp, y_vp, block=256, axis=-1)
     bm, bi = block_vp_quantize(b * 64, w_fxp, w_vp, block=256, axis=0)

@@ -1,10 +1,15 @@
 """Pallas TPU kernels for the VP compute hot-spots.
 
-Each kernel has: <name>.py (pl.pallas_call + BlockSpec), a pure-jnp oracle
-in ref.py, and a padded/dispatching public wrapper in ops.py.
+Each kernel has: <name>.py (kernel body + launch through substrate.py), a
+pure-jnp oracle in ref.py, and a padded/dispatching public wrapper in
+ops.py.  substrate.py is the shared launch layer: jax-version compat
+shims, in-kernel dequant/quantize/LUT cascades, and the TPU-native /
+interpret / CPU-ref backend dispatcher.
 """
-from .ops import vp_quant, vp_dequant, vp_matmul, block_vp_matmul
-from . import ref, ops
+from .ops import (
+    vp_quant, vp_dequant, vp_matmul, block_vp_matmul, vp_quant_matmul,
+)
+from . import ref, ops, substrate
 
 __all__ = ["vp_quant", "vp_dequant", "vp_matmul", "block_vp_matmul",
-           "ref", "ops"]
+           "vp_quant_matmul", "ref", "ops", "substrate"]

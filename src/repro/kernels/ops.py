@@ -1,30 +1,27 @@
 """Public ops: padding, backend dispatch (TPU kernel vs CPU ref), reshaping.
 
 Models and the MIMO application call these; they never touch pallas_call
-directly.  On a TPU backend the Pallas kernels run natively; on CPU the
-pure-jnp refs run (same math — the refs ARE the oracles the kernels are
-tested against), so the dry-run lowers a graph with identical FLOP/byte
-structure.  `interpret=True` forces the Pallas kernel body on CPU (used by
-the kernel tests).
+directly.  Dispatch is `substrate.resolve_backend` in every op: on a TPU
+backend the Pallas kernels run natively; elsewhere the pure-jnp refs run
+(same math — the refs ARE the oracles the kernels are tested against), so
+the dry-run lowers a graph with identical FLOP/byte structure.
+`interpret=True` forces the Pallas kernel body through the interpreter on
+any backend (used by the kernel tests); an explicit `interpret=False`
+means "don't interpret" and still falls back to the refs off-TPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.formats import FXPFormat, VPFormat
-from . import ref
+from . import ref, substrate
 from .vp_quant import vp_quant_pallas
 from .vp_dequant import vp_dequant_pallas
 from .vp_matmul import vp_matmul_pallas
 from .vp_block_matmul import block_vp_matmul_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .vp_quant_matmul import vp_quant_matmul_pallas
 
 
 def _pad2(x, br, bc, value=0):
@@ -35,33 +32,56 @@ def _pad2(x, br, bc, value=0):
     return x
 
 
+def _check_masks(a_act, b_act, M, K, N, blocks):
+    """Validate optional CSPADE masks against the kernel tile grid.
+
+    Out-of-grid masks would be silently mis-indexed in the kernel (Pallas
+    clamps out-of-bounds scalar reads), so mismatches must fail loudly."""
+    if (a_act is None) != (b_act is None):
+        raise ValueError(
+            "CSPADE masks come in pairs: pass both a_act and b_act or neither")
+    if a_act is None:
+        return
+    bm, bk, bn = blocks
+    if M % bm or K % bk or N % bn:
+        raise ValueError("CSPADE masks require tile-aligned operand shapes")
+    want_a, want_b = (M // bm, K // bk), (K // bk, N // bn)
+    if tuple(a_act.shape) != want_a or tuple(b_act.shape) != want_b:
+        raise ValueError(
+            f"CSPADE mask shapes {tuple(a_act.shape)}/{tuple(b_act.shape)} "
+            f"do not match the blocks={blocks} tile grid "
+            f"(want {want_a}/{want_b}); rebuild the masks on this grid")
+
+
 def vp_quant(x, fxp: FXPFormat, vp: VPFormat, interpret: Optional[bool] = None):
     """float tensor (any rank) -> (significand, index) planes, same shape."""
-    use_kernel = _on_tpu() if interpret is None else True
+    backend = substrate.resolve_backend(interpret)
     shape = x.shape
     x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
-    if not use_kernel:
+    if backend == "ref":
         m, i = ref.vp_quant_ref(x2, fxp, vp)
     else:
         R, C = x2.shape
         xp = _pad2(x2, 256, 256)
-        m, i = vp_quant_pallas(xp, fxp, vp, interpret=bool(interpret))
+        m, i = vp_quant_pallas(
+            xp, fxp, vp, interpret=(backend == "interpret"))
         m, i = m[:R, :C], i[:R, :C]
     return m.reshape(shape), i.reshape(shape)
 
 
 def vp_dequant(m, i, vp: VPFormat, dtype=jnp.float32,
                interpret: Optional[bool] = None):
-    use_kernel = _on_tpu() if interpret is None else True
+    backend = substrate.resolve_backend(interpret)
     shape = m.shape
     m2 = m.reshape(-1, shape[-1]) if m.ndim != 2 else m
     i2 = i.reshape(-1, shape[-1]) if i.ndim != 2 else i
-    if not use_kernel:
+    if backend == "ref":
         out = ref.vp_dequant_ref(m2, i2, vp, dtype)
     else:
         R, C = m2.shape
         mp, ip = _pad2(m2, 256, 256), _pad2(i2, 256, 256)
-        out = vp_dequant_pallas(mp, ip, vp, dtype, interpret=bool(interpret))
+        out = vp_dequant_pallas(
+            mp, ip, vp, dtype, interpret=(backend == "interpret"))
         out = out[:R, :C]
     return out.reshape(shape)
 
@@ -75,20 +95,56 @@ def vp_matmul(
     out_dtype=jnp.float32,
 ):
     """(M,K) x (K,N) VP matmul; CSPADE masks optional (tile grid = blocks)."""
-    use_kernel = _on_tpu() if interpret is None else True
-    if not use_kernel:
+    M, K = a_m.shape
+    _, N = b_m.shape
+    _check_masks(a_act, b_act, M, K, N, blocks)
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
         return ref.vp_matmul_ref(
             a_m, a_i, b_m, b_i, a_fmt, b_fmt,
             a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
     bm, bk, bn = blocks
-    M, K = a_m.shape
-    _, N = b_m.shape
     am, ai = _pad2(a_m, bm, bk), _pad2(a_i, bm, bk)
     bm_, bi = _pad2(b_m, bk, bn), _pad2(b_i, bk, bn)
     out = vp_matmul_pallas(
         am, ai, bm_, bi, a_fmt, b_fmt,
         a_act=a_act, b_act=b_act,
-        interpret=bool(interpret), blocks=blocks, out_dtype=out_dtype)
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:M, :N]
+
+
+def vp_quant_matmul(
+    a, b,
+    a_fxp: FXPFormat, a_vp: VPFormat,
+    b_fxp: FXPFormat, b_vp: VPFormat,
+    a_act=None, b_act=None,
+    blocks: Tuple[int, int, int] = (256, 256, 256),
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """Fused float->VP quantize + matmul: a (M,K) x b (K,N) floats -> (M,N).
+
+    Numerically identical to `vp_quant` on each operand followed by
+    `vp_matmul`, without materializing the quantized planes in HBM.
+    CSPADE masks follow the `blocks` tile grid and require tile-aligned
+    operands (mask calibration needs the planes anyway — see mvm_engine).
+    """
+    bm, bk, bn = blocks
+    M, K = a.shape
+    _, N = b.shape
+    _check_masks(a_act, b_act, M, K, N, blocks)
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        return ref.vp_quant_matmul_ref(
+            a, b, a_fxp, a_vp, b_fxp, b_vp,
+            a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
+    out = vp_quant_matmul_pallas(
+        ap, bp, a_fxp, a_vp, b_fxp, b_vp,
+        a_act=a_act, b_act=b_act,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
     return out[:M, :N]
 
 
@@ -102,8 +158,8 @@ def block_vp_matmul(
 ):
     """Block-VP int8 matmul; index granularity = (row, k-block)."""
     assert blocks[1] == bk, "kernel k-tile must equal index block size"
-    use_kernel = _on_tpu() if interpret is None else True
-    if not use_kernel:
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
         return ref.block_vp_matmul_ref(
             a_m, a_i, b_m, b_i, a_fmt, b_fmt, bk=bk, out_dtype=out_dtype)
     M, K = a_m.shape
@@ -115,5 +171,6 @@ def block_vp_matmul(
     bi = _pad2(b_i, 1, bn)
     out = block_vp_matmul_pallas(
         am, ai, bm_, bi, a_fmt, b_fmt,
-        interpret=bool(interpret), blocks=blocks, out_dtype=out_dtype)
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
     return out[:M, :N]

@@ -88,6 +88,28 @@ def vp_matmul_ref(
     return out.transpose(0, 2, 1, 3).reshape(M, N)
 
 
+def vp_quant_matmul_ref(
+    a, b,
+    a_fxp: FXPFormat, a_vp: VPFormat,
+    b_fxp: FXPFormat, b_vp: VPFormat,
+    a_act: Optional[jax.Array] = None,
+    b_act: Optional[jax.Array] = None,
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.float32,
+):
+    """Fused quantize+matmul oracle: quantize both floats, then VP matmul.
+
+    Exactly `vp_quant_ref` on each operand followed by `vp_matmul_ref` —
+    the fused kernel must reproduce this composition bit-for-bit (it runs
+    the same cascades, just without the HBM round-trip).
+    """
+    a_m, a_i = vp_quant_ref(a, a_fxp, a_vp)
+    b_m, b_i = vp_quant_ref(b, b_fxp, b_vp)
+    return vp_matmul_ref(
+        a_m, a_i, b_m, b_i, a_vp, b_vp,
+        a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
+
+
 def block_vp_matmul_ref(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,

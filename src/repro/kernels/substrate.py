@@ -1,0 +1,241 @@
+"""Shared Pallas kernel substrate: version compat, in-kernel helpers, dispatch.
+
+Every VP kernel in this package launches through this module, so three
+concerns live in exactly one place instead of being cloned per kernel:
+
+  (a) jax/Pallas-TPU API compat — the compiler-params class was renamed
+      (`TPUCompilerParams` on jax 0.4.x, `CompilerParams` on newer jax) and
+      grid-spec construction differs between plain and scalar-prefetch
+      launches; `vp_pallas_call` absorbs both so kernels never import
+      `pallas.tpu` symbols directly.
+  (b) in-kernel VP math — the quantize cascade (paper Fig. 3), the
+      dequant/scale-LUT select cascade (Fig. 5 barrel-mux analogue), and the
+      k-loop accumulator init/flush idiom shared by every matmul kernel.
+  (c) backend dispatch — one `resolve_backend` mapping the public
+      `interpret` argument to TPU-native / interpret / pure-jnp-ref
+      execution, fixing the "explicit interpret=False forces TPU lowering on
+      CPU" bug at a single site for every op in `ops.py`.
+
+Paper mapping: the cascades below are the TPU analogue of the paper's
+offline exponent LUTs (Sec. II-B) — all exponent work is a statically
+unrolled select chain over the (static) exponent list; the MXU only ever
+sees plain fixed-point significands or pre-scaled reals, which is the VP
+cheap-multiplier claim restated as kernel structure.  Sharing one datapath
+across the scalar-VP, block-VP, and fused kernels mirrors how run-time
+reconfigurable multipliers share one array across formats rather than
+cloning it per format.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import FXPFormat, VPFormat
+
+# ---------------------------------------------------------------------------
+# (a) jax-version compat shims
+# ---------------------------------------------------------------------------
+
+# jax >= 0.5 exposes `pltpu.CompilerParams`; 0.4.x calls it
+# `TPUCompilerParams`.  Same constructor signature for the fields we use.
+_COMPILER_PARAMS_CLS = (
+    getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+)
+
+
+def compiler_params(
+    dimension_semantics: Optional[Sequence[str]] = None, **kwargs
+):
+    """Build TPU compiler params across the CompilerParams rename."""
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+def vmem(shape: Tuple[int, ...], dtype):
+    """VMEM scratch allocation (kernels never touch pltpu directly)."""
+    return pltpu.VMEM(shape, dtype)
+
+
+def vp_pallas_call(
+    kernel,
+    *,
+    grid,
+    in_specs,
+    out_specs,
+    out_shape,
+    scratch_shapes: Sequence = (),
+    num_scalar_prefetch: int = 0,
+    dimension_semantics: Optional[Sequence[str]] = None,
+    interpret: bool = False,
+):
+    """The one `pl.pallas_call` site for every kernel in this package.
+
+    With `num_scalar_prefetch > 0` the launch goes through
+    `PrefetchScalarGridSpec` (index maps then receive the scalar refs as
+    trailing args); otherwise through the plain grid/in_specs path.
+    `dimension_semantics` is attached via the version-robust compiler-params
+    shim; both forms accept VMEM scratch.
+    """
+    kwargs = {}
+    if dimension_semantics is not None:
+        kwargs["compiler_params"] = compiler_params(dimension_semantics)
+    if num_scalar_prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=num_scalar_prefetch,
+            grid=grid,
+            in_specs=list(in_specs),
+            out_specs=out_specs,
+            scratch_shapes=list(scratch_shapes),
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+            **kwargs,
+        )
+    if scratch_shapes:
+        kwargs["scratch_shapes"] = list(scratch_shapes)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=list(in_specs),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **kwargs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# (b) shared in-kernel helpers
+# ---------------------------------------------------------------------------
+
+def scale_lut_gather(i, fmt: VPFormat, dtype):
+    """scale[i] = 2**-f_i via an unrolled select cascade (K <= 16).
+
+    The TPU analogue of the paper's exponent LUT read: the list is static,
+    so the gather lowers to one VPU select chain — no exponent arithmetic.
+    Accepts any integer index dtype (uint8 planes or in-kernel int32).
+    """
+    scale = jnp.full(i.shape, jnp.asarray(2.0 ** (-fmt.f[0]), dtype))
+    for k in range(1, fmt.K):
+        scale = jnp.where(
+            i == k, jnp.asarray(2.0 ** (-fmt.f[k]), dtype), scale)
+    return scale
+
+
+def dequant_cascade(m, i, fmt: VPFormat, dtype):
+    """(significand, index) -> real tile: m * 2**-f_i (paper Fig. 5)."""
+    return m.astype(dtype) * scale_lut_gather(i, fmt, dtype)
+
+
+def _quantize_core(x, fxp: FXPFormat, vp: VPFormat, dtype):
+    """Shared Fig. 3 cascade body: (int32 m, int32 i, dtype scale).
+
+    The scale 2**-f_i is selected by the SAME `take` predicates that select
+    (m, i), so fused consumers get it for free instead of re-deriving it
+    from i with a second K-way select chain."""
+    raw = jnp.clip(
+        jnp.round(x * jnp.float32(2.0 ** fxp.F)),
+        fxp.raw_min, fxp.raw_max,
+    ).astype(jnp.int32)
+
+    lo, hi = vp.raw_min, vp.raw_max
+    m_sel = jnp.zeros_like(raw)
+    i_sel = jnp.zeros_like(raw)
+    s_sel = jnp.zeros(raw.shape, dtype)
+    valid_any = jnp.zeros(raw.shape, jnp.bool_)
+    for k in range(vp.K):
+        s_k = fxp.F - vp.f[k]
+        m_k = (
+            jnp.right_shift(raw, s_k) if s_k >= 0
+            else jnp.left_shift(raw, -s_k)
+        )
+        valid_k = (m_k >= lo) & (m_k <= hi)
+        take = valid_k & ~valid_any
+        m_sel = jnp.where(take, m_k, m_sel)
+        i_sel = jnp.where(take, k, i_sel)
+        s_sel = jnp.where(take, jnp.asarray(2.0 ** (-vp.f[k]), dtype), s_sel)
+        valid_any = valid_any | valid_k
+    # Out-of-range on every option: saturate at the coarsest exponent.
+    s_last = fxp.F - vp.f[-1]
+    m_last = jnp.clip(
+        jnp.right_shift(raw, s_last) if s_last >= 0
+        else jnp.left_shift(raw, -s_last),
+        lo, hi,
+    )
+    m = jnp.where(valid_any, m_sel, m_last)
+    i = jnp.where(valid_any, i_sel, vp.K - 1)
+    scale = jnp.where(
+        valid_any, s_sel, jnp.asarray(2.0 ** (-vp.f[-1]), dtype))
+    return m, i, scale
+
+
+def quantize_cascade(x, fxp: FXPFormat, vp: VPFormat):
+    """float tile -> (int32 significand, int32 index) (paper Fig. 3).
+
+    The bit-window + LOD circuit as an unrolled chain of arithmetic shifts
+    and in-range tests over the static exponent list — bit-identical to the
+    circuit (see core.convert for the equivalence proof).  Callers cast the
+    planes to their storage dtypes (int8 / uint8).
+    """
+    m, i, _ = _quantize_core(x, fxp, vp, jnp.float32)
+    return m, i
+
+
+def quantize_dequant_cascade(x, fxp: FXPFormat, vp: VPFormat, dtype):
+    """float tile -> VP-rounded reals m * 2**-f_i in ONE cascade.
+
+    For fused kernels: equals `dequant_cascade(*quantize_cascade(x))` bit
+    for bit, but the scale rides along with the (m, i) selection instead of
+    being re-derived from i by a second K-way select chain.
+    """
+    m, _, scale = _quantize_core(x, fxp, vp, dtype)
+    return m.astype(dtype) * scale
+
+
+def accum_init(acc_ref, ki):
+    """Zero the VMEM accumulator on the first k step."""
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def accum_flush(o_ref, acc_ref, ki, nk: int):
+    """Write the accumulator to the output tile on the last k step."""
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# (c) backend dispatch
+# ---------------------------------------------------------------------------
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(interpret: Optional[bool]) -> str:
+    """Map a public op's `interpret` argument to an execution backend.
+
+    ``True``          -> ``"interpret"``: run the Pallas kernel body through
+                         the interpreter (any backend; the kernel tests use
+                         this on CPU).
+    ``None``/``False`` -> ``"native"`` on a TPU backend, ``"ref"`` (the
+                         pure-jnp oracle in ref.py) everywhere else.
+
+    An explicit ``False`` means "don't interpret", never "force native
+    lowering": attempting TPU lowering on a CPU backend was the seed bug
+    (`use_kernel = _on_tpu() if interpret is None else True`) that this
+    dispatcher retires for every op at once.
+    """
+    if interpret:
+        return "interpret"
+    return "native" if on_tpu() else "ref"

@@ -7,7 +7,8 @@ list.  Significands stay int8 all the way into the MXU
 tile accumulator is then scaled by the factorized product scales
    2^-(f_a[ia] + f_b[ib]) = lutA[ia] * lutB[ib]
 (one VPU multiply per row/col vector) — the paper's "no exponent
-addition" property: per-product exponent work is two tiny LUT reads.
+addition" property: per-product exponent work is two tiny LUT reads
+(`substrate.scale_lut_gather`).
 """
 from __future__ import annotations
 
@@ -16,20 +17,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import VPFormat
+from . import substrate as sub
 
 BM, BK, BN = 256, 256, 256
-
-
-def _lut_gather(i, fmt: VPFormat, dtype):
-    """scale[i] via an unrolled select cascade (K <= 16)."""
-    scale = jnp.full(i.shape, jnp.asarray(2.0 ** (-fmt.f[0]), dtype))
-    for k in range(1, fmt.K):
-        scale = jnp.where(
-            i == jnp.uint8(k), jnp.asarray(2.0 ** (-fmt.f[k]), dtype), scale)
-    return scale
 
 
 def _block_vp_matmul_kernel(
@@ -37,10 +29,7 @@ def _block_vp_matmul_kernel(
     *, a_fmt: VPFormat, b_fmt: VPFormat, nk: int,
 ):
     ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    sub.accum_init(acc_ref, ki)
 
     # int8 x int8 -> int32 on the MXU.
     acc_i32 = jax.lax.dot_general(
@@ -48,13 +37,11 @@ def _block_vp_matmul_kernel(
         preferred_element_type=jnp.int32,
     )
     # Factorized scales: one per A row, one per B col (this k-tile).
-    sa = _lut_gather(a_i_ref[...], a_fmt, jnp.float32)  # (bm, 1)
-    sb = _lut_gather(b_i_ref[...], b_fmt, jnp.float32)  # (1, bn)
+    sa = sub.scale_lut_gather(a_i_ref[...], a_fmt, jnp.float32)  # (bm, 1)
+    sb = sub.scale_lut_gather(b_i_ref[...], b_fmt, jnp.float32)  # (1, bn)
     acc_ref[...] += acc_i32.astype(jnp.float32) * sa * sb
 
-    @pl.when(ki == nk - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    sub.accum_flush(o_ref, acc_ref, ki, nk)
 
 
 @functools.partial(
@@ -82,7 +69,7 @@ def block_vp_matmul_pallas(
 
     kernel = functools.partial(
         _block_vp_matmul_kernel, a_fmt=a_fmt, b_fmt=b_fmt, nk=nk)
-    return pl.pallas_call(
+    return sub.vp_pallas_call(
         kernel,
         grid=(nm, nn, nk),
         in_specs=[
@@ -93,9 +80,7 @@ def block_vp_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        scratch_shapes=[sub.vmem((bm, bn), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(a_m, a_i, b_m, b_i)

@@ -1,8 +1,8 @@
 """Pallas TPU kernel: VP2FXP / VP-to-real tile dequantizer (paper Fig. 5).
 
-The K-way shift mux becomes `m * scale[i]` with the (static) scale list
-unrolled as a where-chain (K <= 16), i.e. one VPU select cascade — the
-TPU analogue of the barrel mux.
+The K-way shift mux is the substrate's `dequant_cascade`: `m * scale[i]`
+with the (static) scale list unrolled as a where-chain (K <= 16), i.e. one
+VPU select cascade — the TPU analogue of the barrel mux.
 """
 from __future__ import annotations
 
@@ -13,18 +13,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.formats import VPFormat
+from . import substrate as sub
 
 BLOCK_R, BLOCK_C = 256, 256
 
 
 def _vp_dequant_kernel(m_ref, i_ref, o_ref, *, vp: VPFormat, dtype):
-    m = m_ref[...].astype(dtype)
-    i = i_ref[...]
-    scale = jnp.full(m.shape, jnp.asarray(2.0 ** (-vp.f[0]), dtype))
-    for k in range(1, vp.K):
-        scale = jnp.where(
-            i == jnp.uint8(k), jnp.asarray(2.0 ** (-vp.f[k]), dtype), scale)
-    o_ref[...] = m * scale
+    o_ref[...] = sub.dequant_cascade(m_ref[...], i_ref[...], vp, dtype)
 
 
 @functools.partial(
@@ -37,11 +32,10 @@ def vp_dequant_pallas(
 ):
     R, C = m.shape
     br, bc = block
-    grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
     spec = pl.BlockSpec((br, bc), lambda r, c: (r, c))
-    return pl.pallas_call(
+    return sub.vp_pallas_call(
         functools.partial(_vp_dequant_kernel, vp=vp, dtype=dtype),
-        grid=grid,
+        grid=(pl.cdiv(R, br), pl.cdiv(C, bc)),
         in_specs=[spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((R, C), dtype),

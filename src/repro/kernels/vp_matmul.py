@@ -3,14 +3,16 @@
 TPU adaptation of the B-VP design:
   * operands arrive as VP planes (int8 significand + uint8 exponent index)
     — 8.25 bits/element of HBM traffic instead of 16 (bf16);
-  * each VMEM tile is dequantized in-register (m * scale[i], the VP2FXP
-    barrel-mux analogue) and fed to the MXU in f32/bf16;
+  * each VMEM tile is dequantized in-register (the substrate's
+    `dequant_cascade`, the VP2FXP barrel-mux analogue) and fed to the MXU
+    in f32/bf16;
   * CSPADE is tile-granular: per-tile activity flags are scalar-prefetched
     into SMEM and `pl.when` skips the MXU op when BOTH operand tiles are
     quiet (the systolic-array analogue of partial-product muting).
 
 Grid is (m, n, k) with k innermost; a VMEM f32 scratch accumulates across
-the k steps and is flushed to the output on the last step.
+the k steps and is flushed to the output on the last step.  Launch plumbing
+(compat shims, grid-spec construction) lives in `substrate.py`.
 """
 from __future__ import annotations
 
@@ -19,20 +21,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import VPFormat
+from . import substrate as sub
 
 BM, BK, BN = 256, 256, 256
-
-
-def _dequant(m, i, fmt: VPFormat, dtype):
-    x = m.astype(dtype)
-    scale = jnp.full(m.shape, jnp.asarray(2.0 ** (-fmt.f[0]), dtype))
-    for k in range(1, fmt.K):
-        scale = jnp.where(
-            i == jnp.uint8(k), jnp.asarray(2.0 ** (-fmt.f[k]), dtype), scale)
-    return x * scale
 
 
 def _vp_matmul_kernel(
@@ -45,14 +38,11 @@ def _vp_matmul_kernel(
     *, a_fmt: VPFormat, b_fmt: VPFormat, nk: int, cspade: bool, dtype,
 ):
     ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    sub.accum_init(acc_ref, ki)
 
     def _compute():
-        a = _dequant(a_m_ref[...], a_i_ref[...], a_fmt, dtype)
-        b = _dequant(b_m_ref[...], b_i_ref[...], b_fmt, dtype)
+        a = sub.dequant_cascade(a_m_ref[...], a_i_ref[...], a_fmt, dtype)
+        b = sub.dequant_cascade(b_m_ref[...], b_i_ref[...], b_fmt, dtype)
         acc_ref[...] += jax.lax.dot_general(
             a, b, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -65,9 +55,7 @@ def _vp_matmul_kernel(
     else:
         _compute()
 
-    @pl.when(ki == nk - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    sub.accum_flush(o_ref, acc_ref, ki, nk)
 
 
 @functools.partial(
@@ -97,8 +85,12 @@ def vp_matmul_pallas(
         a_act = jnp.ones((nm, nk), jnp.int32)
         b_act = jnp.ones((nk, nn), jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+    kernel = functools.partial(
+        _vp_matmul_kernel,
+        a_fmt=a_fmt, b_fmt=b_fmt, nk=nk, cspade=cspade, dtype=jnp.float32,
+    )
+    return sub.vp_pallas_call(
+        kernel,
         grid=(nm, nn, nk),
         in_specs=[
             # index maps get the scalar-prefetch refs as trailing args
@@ -108,18 +100,9 @@ def vp_matmul_pallas(
             pl.BlockSpec((bk, bn), lambda mi, ni, ki, *_: (ki, ni)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki, *_: (mi, ni)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    kernel = functools.partial(
-        _vp_matmul_kernel,
-        a_fmt=a_fmt, b_fmt=b_fmt, nk=nk, cspade=cspade, dtype=jnp.float32,
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        scratch_shapes=[sub.vmem((bm, bn), jnp.float32)],
+        num_scalar_prefetch=2,
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(a_act, b_act, a_m, a_i, b_m, b_i)

@@ -3,9 +3,10 @@
 Target: TPU (VMEM tiles, VPU integer ops).  Validated on CPU with
 interpret=True against `ref.vp_quant_ref`.
 
-The bit-window + LOD circuit becomes an unrolled chain of arithmetic
-shifts and in-range tests over the (static) exponent list — bit-identical
-to the circuit (see core.convert docstring for the equivalence proof).
+The bit-window + LOD circuit is the substrate's `quantize_cascade`: an
+unrolled chain of arithmetic shifts and in-range tests over the (static)
+exponent list — bit-identical to the circuit (see core.convert docstring
+for the equivalence proof).
 """
 from __future__ import annotations
 
@@ -17,41 +18,14 @@ from jax.experimental import pallas as pl
 
 from repro.core.formats import FXPFormat, VPFormat
 from repro.core.vp_tensor import significand_dtype
+from . import substrate as sub
 
 # Tile shape: multiple of the int8 min-tile (32, 128) and f32 min-tile (8, 128).
 BLOCK_R, BLOCK_C = 256, 256
 
 
 def _vp_quant_kernel(x_ref, m_ref, i_ref, *, fxp: FXPFormat, vp: VPFormat):
-    x = x_ref[...]
-    raw = jnp.clip(
-        jnp.round(x * jnp.float32(2.0 ** fxp.F)),
-        fxp.raw_min, fxp.raw_max,
-    ).astype(jnp.int32)
-
-    lo, hi = vp.raw_min, vp.raw_max
-    m_sel = jnp.zeros_like(raw)
-    i_sel = jnp.zeros_like(raw)
-    valid_any = jnp.zeros(raw.shape, jnp.bool_)
-    for k in range(vp.K):
-        s_k = fxp.F - vp.f[k]
-        m_k = (
-            jnp.right_shift(raw, s_k) if s_k >= 0
-            else jnp.left_shift(raw, -s_k)
-        )
-        valid_k = (m_k >= lo) & (m_k <= hi)
-        take = valid_k & ~valid_any
-        m_sel = jnp.where(take, m_k, m_sel)
-        i_sel = jnp.where(take, k, i_sel)
-        valid_any = valid_any | valid_k
-    s_last = fxp.F - vp.f[-1]
-    m_last = jnp.clip(
-        jnp.right_shift(raw, s_last) if s_last >= 0
-        else jnp.left_shift(raw, -s_last),
-        lo, hi,
-    )
-    m = jnp.where(valid_any, m_sel, m_last)
-    i = jnp.where(valid_any, i_sel, vp.K - 1)
+    m, i = sub.quantize_cascade(x_ref[...], fxp, vp)
     m_ref[...] = m.astype(m_ref.dtype)
     i_ref[...] = i.astype(jnp.uint8)
 
@@ -66,11 +40,10 @@ def vp_quant_pallas(
     """Quantize a 2D f32 array to VP planes with a tiled Pallas kernel."""
     R, C = x.shape
     br, bc = block
-    grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
     spec = pl.BlockSpec((br, bc), lambda r, c: (r, c))
-    m, i = pl.pallas_call(
+    m, i = sub.vp_pallas_call(
         functools.partial(_vp_quant_kernel, fxp=fxp, vp=vp),
-        grid=grid,
+        grid=(pl.cdiv(R, br), pl.cdiv(C, bc)),
         in_specs=[spec],
         out_specs=[spec, spec],
         out_shape=[

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FXPFormat, VPFormat
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, substrate
 from .equalizer import EqualizerSpec
 
 
@@ -35,6 +35,7 @@ def equalize_vp_kernel(
     y: jax.Array,            # (n, B) complex
     cspade_threshold_quantile: Optional[float] = None,
     interpret: Optional[bool] = None,
+    fused: Optional[bool] = None,
 ) -> jax.Array:
     """s_hat (n, U) complex through the VP kernel path.
 
@@ -52,6 +53,16 @@ def equalize_vp_kernel(
     CONTRACTION-free row dim: rows = n*U, and the y matrix holds each
     realization's vector in its own column; the result's (row, col) pairs
     with col == row's realization are the wanted dot products.
+
+    `fused` selects the fused quantize+matmul kernel (ops.vp_quant_matmul,
+    one pallas_call per product, no quantized-plane round-trip).  The
+    default (None) uses it only when ALL of: no CSPADE masks are requested
+    (their calibration needs the materialized planes), the grid fan-out is
+    small (<= 4 tiles per output axis — the fused kernel re-quantizes each
+    operand tile once per opposing output tile), and a kernel backend is
+    active (TPU-native or interpret; on the CPU ref path fusion saves no
+    HBM and would re-quantize the shared operands).  Numerics are
+    identical on every path — same cascades throughout.
     """
     assert spec.is_vp
     n, U, B = w.shape
@@ -63,12 +74,6 @@ def equalize_vp_kernel(
     yr = y.real.T.astype(jnp.float32)   # (B, n)
     yi = y.imag.T.astype(jnp.float32)
 
-    wr_m, wr_i = _vp_planes(wr, spec.w_gain, fxp_w, vp_w, interpret)
-    wi_m, wi_i = _vp_planes(wi, spec.w_gain, fxp_w, vp_w, interpret)
-    yr_m, yr_i = _vp_planes(yr, spec.y_gain, fxp_y, vp_y, interpret)
-    yi_m, yi_i = _vp_planes(yi, spec.y_gain, fxp_y, vp_y, interpret)
-
-    a_act = b_act = None
     M, K = wr.shape
     N = yr.shape[1]
 
@@ -79,23 +84,64 @@ def equalize_vp_kernel(
         return t
 
     tiles = (_div_tile(M, 256), _div_tile(K, 256), _div_tile(N, 256))
-    if cspade_threshold_quantile is not None:
-        q = cspade_threshold_quantile
-        ta = jnp.quantile(jnp.abs(wr) * spec.w_gain, q)
-        tb = jnp.quantile(jnp.abs(yr) * spec.y_gain, q)
-        Wd = ref.vp_dequant_ref(wr_m, wr_i, vp_w) * spec.w_gain
-        Yd = ref.vp_dequant_ref(yr_m, yr_i, vp_y) * spec.y_gain
-        a_act, b_act = ref.cspade_tile_masks(Wd, Yd, *tiles, ta, tb)
 
-    def mm(am, ai, bm_, bi):
-        return ops.vp_matmul(am, ai, bm_, bi, vp_w, vp_y,
-                             a_act=a_act, b_act=b_act, blocks=tiles,
-                             interpret=interpret)
+    if fused is None:
+        # CSPADE mask calibration needs the materialized planes, so masked
+        # runs stay on the unfused path.  Otherwise fold the quantization
+        # into the matmul pallas_call (no quantized-plane HBM round-trip)
+        # — but only while the grid fan-out is small: the fused kernel
+        # re-quantizes each A tile N/bn times and each B tile M/bm times,
+        # so past a few tiles per output axis the redundant cascade work
+        # outgrows the saved HBM traffic.
+        # ...and only on a kernel backend: the ref path materializes the
+        # planes regardless, so fusion would just re-quantize the operands
+        # shared by the 4-RM products (8 cascades instead of 4).
+        nm = -(-M // tiles[0])
+        nn = -(-N // tiles[2])
+        fused = (cspade_threshold_quantile is None
+                 and max(nm, nn) <= 4
+                 and substrate.resolve_backend(interpret) != "ref")
 
-    rr = mm(wr_m, wr_i, yr_m, yr_i)    # (nU, n)
-    ii = mm(wi_m, wi_i, yi_m, yi_i)
-    ri = mm(wr_m, wr_i, yi_m, yi_i)
-    ir = mm(wi_m, wi_i, yr_m, yr_i)
+    if fused:
+        if cspade_threshold_quantile is not None:
+            raise ValueError(
+                "fused path has no materialized planes to calibrate masks on")
+
+        def mmf(a_f, b_f):
+            return ops.vp_quant_matmul(
+                a_f, b_f, fxp_w, vp_w, fxp_y, vp_y,
+                blocks=tiles, interpret=interpret)
+
+        wrg, wig = wr * spec.w_gain, wi * spec.w_gain
+        yrg, yig = yr * spec.y_gain, yi * spec.y_gain
+        rr = mmf(wrg, yrg)    # (nU, n)
+        ii = mmf(wig, yig)
+        ri = mmf(wrg, yig)
+        ir = mmf(wig, yrg)
+    else:
+        wr_m, wr_i = _vp_planes(wr, spec.w_gain, fxp_w, vp_w, interpret)
+        wi_m, wi_i = _vp_planes(wi, spec.w_gain, fxp_w, vp_w, interpret)
+        yr_m, yr_i = _vp_planes(yr, spec.y_gain, fxp_y, vp_y, interpret)
+        yi_m, yi_i = _vp_planes(yi, spec.y_gain, fxp_y, vp_y, interpret)
+
+        a_act = b_act = None
+        if cspade_threshold_quantile is not None:
+            q = cspade_threshold_quantile
+            ta = jnp.quantile(jnp.abs(wr) * spec.w_gain, q)
+            tb = jnp.quantile(jnp.abs(yr) * spec.y_gain, q)
+            Wd = ref.vp_dequant_ref(wr_m, wr_i, vp_w) * spec.w_gain
+            Yd = ref.vp_dequant_ref(yr_m, yr_i, vp_y) * spec.y_gain
+            a_act, b_act = ref.cspade_tile_masks(Wd, Yd, *tiles, ta, tb)
+
+        def mm(am, ai, bm_, bi):
+            return ops.vp_matmul(am, ai, bm_, bi, vp_w, vp_y,
+                                 a_act=a_act, b_act=b_act, blocks=tiles,
+                                 interpret=interpret)
+
+        rr = mm(wr_m, wr_i, yr_m, yr_i)    # (nU, n)
+        ii = mm(wi_m, wi_i, yi_m, yi_i)
+        ri = mm(wr_m, wr_i, yi_m, yi_i)
+        ir = mm(wi_m, wi_i, yr_m, yr_i)
 
     re = (rr - ii) / (spec.w_gain * spec.y_gain)
     im = (ri + ir) / (spec.w_gain * spec.y_gain)
