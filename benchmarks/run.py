@@ -1,15 +1,25 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--json F]
 
 Prints ``name,us_per_call,derived`` CSV rows.  `derived` carries the
 figure-level quantity being reproduced (NMSE gap in bits, area/power
 ratios, BER deltas, muting rates ...) so each row maps 1:1 onto a claim
 in the paper; EXPERIMENTS.md quotes these rows.
+
+PR-2 additions: the batched-vs-masked engine sweep (the truly-batched
+kernel grid against the legacy masked-diagonal fold, wall-clock + FLOP
+count per realization count) and the wideband OFDM subcarrier-scaling
+sweep.  `--smoke` runs only those sweeps at tiny shapes — a CI dispatch
+check for every kernel execution path (batched/masked x fused/unfused,
+flat/vmap wideband) that fails loudly on kernel dispatch errors.
+`--json F` writes all emitted rows to F (committed as BENCH_pr2.json;
+CI uploads the smoke run's file as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -19,7 +29,12 @@ import numpy as np
 from repro.core import FXPFormat, VPFormat, vp_quantize, cost_model as cm
 from repro.core.param_search import search_exponent_list, vp_nmse
 from repro.kernels import ops, ref
-from repro.mimo import ChannelConfig, table1_specs, cspade
+from repro.mimo import (
+    ChannelConfig, OFDMConfig, WidebandCalibrator, table1_specs, cspade,
+    make_wideband_ensemble, equalize_wideband,
+)
+from repro.mimo.mvm_engine import equalize_vp_kernel, mvm_flops
+from repro.mimo.ofdm import wideband_nmse
 from repro.mimo.sim import (
     make_ensemble, pdf_stats, nmse_vs_bitwidth, bitwidth_gap,
     ber_float, ber_quantized, calibrate_specs,
@@ -189,6 +204,98 @@ def kernel_bench():
          "int8-MXU path (beyond-paper)")
 
 
+def batched_vs_masked(n_list=(8, 32, 128), n_time=5):
+    """The PR-2 tentpole claim: the truly-batched grid beats the legacy
+    masked-diagonal fold on wall-clock AND FLOP count once a few
+    realizations are batched (the masked fold wastes n x FLOPs)."""
+    cfg = ChannelConfig()
+    ens = make_ensemble(jax.random.PRNGKey(11), cfg, max(n_list), 20.0)
+    spec = calibrate_specs([s for s in table1_specs()
+                            if s.name == "B-VP"], ens)[0]
+    wins = 0
+    for n in n_list:
+        w, y = ens.w_beam[:n], ens.y_beam[:n]
+        out = {}
+        for mode in ("batched", "masked"):
+            us = _timeit(lambda m=mode: jax.block_until_ready(
+                equalize_vp_kernel(spec, w, y, mode=m)), n=n_time)
+            out[mode] = us
+            emit(f"engine_{mode}_n{n}", us,
+                 f"flops={mvm_flops(n, cfg.U, cfg.B, mode)}")
+        speedup = out["masked"] / out["batched"]
+        fl_ratio = (mvm_flops(n, cfg.U, cfg.B, "masked")
+                    / mvm_flops(n, cfg.U, cfg.B, "batched"))
+        won = speedup > 1.0
+        wins += won
+        emit(f"engine_batched_speedup_n{n}", out["batched"],
+             f"wallclock_x{speedup:.2f};flops_x{fl_ratio:.0f};"
+             f"batched_wins={'yes' if won else 'NO'}")
+    return wins == len(n_list)
+
+
+def subcarrier_scaling(S_list=(4, 16, 64), n=16, n_time=3):
+    """Wideband OFDM sweep: whole-band equalization cost vs subcarrier
+    count through the flat (single batched kernel launch) path."""
+    cfg = ChannelConfig()
+    base = next(s for s in table1_specs() if s.name == "B-VP")
+    for S in S_list:
+        ofdm = OFDMConfig(n_subcarriers=S, n_taps=4)
+        ens = make_wideband_ensemble(
+            jax.random.PRNGKey(13), cfg, ofdm, n, 20.0)
+        specs = WidebandCalibrator(base).specs_for(ens)
+        us = _timeit(lambda: jax.block_until_ready(
+            equalize_wideband(specs, ens.w_beam, ens.y_beam, how="flat")),
+            n=n_time)
+        s_hat = equalize_wideband(specs, ens.w_beam, ens.y_beam, how="flat")
+        nmse = wideband_nmse(s_hat, ens.s)
+        emit(f"ofdm_wideband_S{S}", us,
+             f"us_per_subcarrier={us / S:.1f};nmse={nmse:.2e};"
+             f"batch={S * n}x(2U,B)x(B,2)")
+
+
+def smoke():
+    """Tiny-shape dispatch check over every new execution path.
+
+    Exercises batched/masked x fused/unfused, the wideband flat/vmap
+    paths, and the interpret-mode kernels — any kernel dispatch error
+    (bad grid, block spec, scalar-prefetch plumbing) raises and fails
+    the CI job.  Also asserts the batched-vs-masked parity inline.
+    """
+    cfg = ChannelConfig()
+    ens = make_ensemble(jax.random.PRNGKey(0), cfg, 8, 20.0)
+    spec = calibrate_specs([s for s in table1_specs()
+                            if s.name == "B-VP"], ens)[0]
+    w, y = ens.w_beam, ens.y_beam
+    outs = {}
+    for mode in ("batched", "masked"):
+        for fused in (False, True):
+            for interp in (None, True):
+                t0 = time.perf_counter()
+                s = jax.block_until_ready(equalize_vp_kernel(
+                    spec, w, y, mode=mode, fused=fused, interpret=interp))
+                us = (time.perf_counter() - t0) * 1e6
+                outs[(mode, fused, interp)] = np.asarray(s)
+                emit(f"smoke_{mode}_{'fused' if fused else 'unfused'}_"
+                     f"{'interp' if interp else 'ref'}", us, "dispatch ok")
+    first = next(iter(outs.values()))
+    assert all((v == first).all() for v in outs.values()), \
+        "smoke parity violation across engine paths"
+
+    ofdm = OFDMConfig(n_subcarriers=4, n_taps=2)
+    wens = make_wideband_ensemble(jax.random.PRNGKey(1), cfg, ofdm, 4, 20.0)
+    specs = WidebandCalibrator(spec).specs_for(wens)
+    for how in ("flat", "vmap", "shard_map"):
+        t0 = time.perf_counter()
+        s = jax.block_until_ready(equalize_wideband(
+            specs, wens.w_beam, wens.y_beam, how=how))
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"smoke_ofdm_{how}", us, "dispatch ok")
+
+    assert batched_vs_masked(n_list=(8, 16), n_time=2), \
+        "batched engine lost to the masked fold at smoke shapes"
+    subcarrier_scaling(S_list=(2, 4), n=4, n_time=1)
+
+
 def cspade_tile_stats(ens):
     """Tile-level CSPADE muting on real beamspace stimuli (TPU adaptation).
 
@@ -219,20 +326,39 @@ def cspade_tile_stats(ens):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape dispatch check of the new kernel "
+                         "paths only (CI job)")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="also write the emitted rows to FILE as JSON")
     args, _ = ap.parse_known_args()
     n_ch = 400 if args.fast else 2000
     n_ber = 1000 if args.fast else 4000
 
     print("name,us_per_call,derived")
-    ens = fig7_pdf_stats(n_ch)
-    fig8_nmse(ens)
-    tab1_ber(n_ber)
-    tab1_param_search(ens)
-    fig11_area()
-    fig11_power(ens)
-    sec5b_flp()
-    kernel_bench()
-    cspade_tile_stats(ens)
+    if args.smoke:
+        smoke()
+    else:
+        ens = fig7_pdf_stats(n_ch)
+        fig8_nmse(ens)
+        tab1_ber(n_ber)
+        tab1_param_search(ens)
+        fig11_area()
+        fig11_power(ens)
+        sec5b_flp()
+        kernel_bench()
+        cspade_tile_stats(ens)
+        batched_vs_masked()
+        subcarrier_scaling()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"rows": [
+                    {"name": n, "us_per_call": us, "derived": d}
+                    for n, us, d in ROWS]},
+                f, indent=1)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -8,8 +8,10 @@ interpret / CPU-ref backend dispatcher.
 """
 from .ops import (
     vp_quant, vp_dequant, vp_matmul, block_vp_matmul, vp_quant_matmul,
+    vp_matmul_batched, vp_quant_matmul_batched,
 )
 from . import ref, ops, substrate
 
 __all__ = ["vp_quant", "vp_dequant", "vp_matmul", "block_vp_matmul",
-           "vp_quant_matmul", "ref", "ops", "substrate"]
+           "vp_quant_matmul", "vp_matmul_batched", "vp_quant_matmul_batched",
+           "ref", "ops", "substrate"]

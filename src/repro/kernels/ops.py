@@ -19,9 +19,12 @@ from repro.core.formats import FXPFormat, VPFormat
 from . import ref, substrate
 from .vp_quant import vp_quant_pallas
 from .vp_dequant import vp_dequant_pallas
-from .vp_matmul import vp_matmul_pallas
+from .vp_matmul import vp_matmul_pallas, vp_matmul_batched_pallas
 from .vp_block_matmul import block_vp_matmul_pallas
-from .vp_quant_matmul import vp_quant_matmul_pallas
+from .vp_quant_matmul import (
+    vp_quant_matmul_pallas,
+    vp_quant_matmul_batched_pallas,
+)
 
 
 def _pad2(x, br, bc, value=0):
@@ -29,6 +32,15 @@ def _pad2(x, br, bc, value=0):
     pr, pc = (-R) % br, (-C) % bc
     if pr or pc:
         x = jnp.pad(x, ((0, pr), (0, pc)), constant_values=value)
+    return x
+
+
+def _pad3(x, br, bc, value=0):
+    """Pad the trailing two dims of a (G, R, C) batch to tile multiples."""
+    _, R, C = x.shape
+    pr, pc = (-R) % br, (-C) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, 0), (0, pr), (0, pc)), constant_values=value)
     return x
 
 
@@ -50,6 +62,25 @@ def _check_masks(a_act, b_act, M, K, N, blocks):
         raise ValueError(
             f"CSPADE mask shapes {tuple(a_act.shape)}/{tuple(b_act.shape)} "
             f"do not match the blocks={blocks} tile grid "
+            f"(want {want_a}/{want_b}); rebuild the masks on this grid")
+
+
+def _check_masks_batched(a_act, b_act, G, M, K, N, blocks):
+    """Validate optional batched CSPADE masks against the (G, tile) grid."""
+    if (a_act is None) != (b_act is None):
+        raise ValueError(
+            "CSPADE masks come in pairs: pass both a_act and b_act or neither")
+    if a_act is None:
+        return
+    bm, bk, bn = blocks
+    if M % bm or K % bk or N % bn:
+        raise ValueError("CSPADE masks require tile-aligned operand shapes")
+    want_a = (G, M // bm, K // bk)
+    want_b = (G, K // bk, N // bn)
+    if tuple(a_act.shape) != want_a or tuple(b_act.shape) != want_b:
+        raise ValueError(
+            f"batched CSPADE mask shapes {tuple(a_act.shape)}/"
+            f"{tuple(b_act.shape)} do not match the blocks={blocks} grid "
             f"(want {want_a}/{want_b}); rebuild the masks on this grid")
 
 
@@ -146,6 +177,74 @@ def vp_quant_matmul(
         interpret=(backend == "interpret"), blocks=blocks,
         out_dtype=out_dtype)
     return out[:M, :N]
+
+
+def vp_matmul_batched(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act=None, b_act=None,
+    blocks: Tuple[int, int, int] = (256, 256, 256),
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """(G,M,K) x (G,K,N) truly-batched VP matmul.
+
+    Each batch element runs its own tile program on the kernel's leading
+    batch grid dimension — the scalable replacement for folding G into the
+    row axis and discarding off-diagonal columns.  CSPADE masks are per
+    (batch, tile): a_act (G, M/bm, K/bk), b_act (G, K/bk, N/bn).
+    """
+    G, M, K = a_m.shape
+    _, _, N = b_m.shape
+    _check_masks_batched(a_act, b_act, G, M, K, N, blocks)
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        return ref.vp_matmul_batched_ref(
+            a_m, a_i, b_m, b_i, a_fmt, b_fmt,
+            a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    bm, bk, bn = blocks
+    am, ai = _pad3(a_m, bm, bk), _pad3(a_i, bm, bk)
+    bm_, bi = _pad3(b_m, bk, bn), _pad3(b_i, bk, bn)
+    out = vp_matmul_batched_pallas(
+        am, ai, bm_, bi, a_fmt, b_fmt,
+        a_act=a_act, b_act=b_act,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:, :M, :N]
+
+
+def vp_quant_matmul_batched(
+    a, b,
+    a_fxp: FXPFormat, a_vp: VPFormat,
+    b_fxp: FXPFormat, b_vp: VPFormat,
+    a_act=None, b_act=None,
+    blocks: Tuple[int, int, int] = (256, 256, 256),
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """Truly-batched fused float->VP quantize + matmul over (G, M, K) x
+    (G, K, N) floats.
+
+    Numerically identical to `vp_quant` on each operand followed by
+    `vp_matmul_batched`, with no quantized-plane HBM round-trip — ONE
+    pallas_call for the whole batch.
+    """
+    G, M, K = a.shape
+    _, _, N = b.shape
+    _check_masks_batched(a_act, b_act, G, M, K, N, blocks)
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        return ref.vp_quant_matmul_batched_ref(
+            a, b, a_fxp, a_vp, b_fxp, b_vp,
+            a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    bm, bk, bn = blocks
+    ap, bp = _pad3(a, bm, bk), _pad3(b, bk, bn)
+    out = vp_quant_matmul_batched_pallas(
+        ap, bp, a_fxp, a_vp, b_fxp, b_vp,
+        a_act=a_act, b_act=b_act,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:, :M, :N]
 
 
 def block_vp_matmul(

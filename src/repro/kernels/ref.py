@@ -110,6 +110,78 @@ def vp_quant_matmul_ref(
         a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
 
 
+def cspade_tile_masks_batched(
+    a_deq, b_deq, bm: int, bk: int, bn: int,
+    thresh_a: float, thresh_b: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-(batch, tile) activity of A (G,M,K) and B (G,K,N) on the batched
+    kernel grid: `cspade_tile_masks` with a leading batch axis.
+
+    Returns (a_act [G, M/bm, K/bk], b_act [G, K/bk, N/bn]) int32 flags.
+    On the MVM shapes (one tile per axis) this degenerates to one flag per
+    realization — the batched analogue of muting a whole quiet request.
+    """
+    G, M, K = a_deq.shape
+    _, _, N = b_deq.shape
+    a_tiles = jnp.abs(a_deq).reshape(
+        G, M // bm, bm, K // bk, bk).max((2, 4))
+    b_tiles = jnp.abs(b_deq).reshape(
+        G, K // bk, bk, N // bn, bn).max((2, 4))
+    return (
+        tile_activity(a_tiles, thresh_a).astype(jnp.int32),
+        tile_activity(b_tiles, thresh_b).astype(jnp.int32),
+    )
+
+
+def vp_matmul_batched_ref(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act: Optional[jax.Array] = None,
+    b_act: Optional[jax.Array] = None,
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.float32,
+):
+    """Batched VP x VP matmul oracle: (G, M, K) x (G, K, N) -> (G, M, N).
+
+    Per batch element this is exactly `vp_matmul_ref`; with activity masks
+    the muting is per (batch, tile-pair) like the batched kernel's skip.
+    """
+    a = vp_to_float(a_m, a_i, a_fmt, out_dtype)
+    b = vp_to_float(b_m, b_i, b_fmt, out_dtype)
+    if a_act is None:
+        return jax.lax.dot_general(
+            a, b, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=out_dtype)
+    bm, bk, bn = tiles
+    G, M, K = a.shape
+    _, _, N = b.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    keep = (a_act[:, :, :, None] | b_act[:, None, :, :]).astype(out_dtype)
+    a_t = a.reshape(G, nm, bm, nk, bk).transpose(0, 1, 3, 2, 4)
+    b_t = b.reshape(G, nk, bk, nn, bn).transpose(0, 1, 3, 2, 4)
+    prod = jnp.einsum("gxyab,gyzbc->gxyzac", a_t, b_t)
+    prod = prod * keep[:, :, :, :, None, None]
+    out = prod.sum(2)
+    return out.transpose(0, 1, 3, 2, 4).reshape(G, M, N)
+
+
+def vp_quant_matmul_batched_ref(
+    a, b,
+    a_fxp: FXPFormat, a_vp: VPFormat,
+    b_fxp: FXPFormat, b_vp: VPFormat,
+    a_act: Optional[jax.Array] = None,
+    b_act: Optional[jax.Array] = None,
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.float32,
+):
+    """Batched fused quantize+matmul oracle: quantize, then batched matmul."""
+    a_m, a_i = vp_quant_ref(a, a_fxp, a_vp)
+    b_m, b_i = vp_quant_ref(b, b_fxp, b_vp)
+    return vp_matmul_batched_ref(
+        a_m, a_i, b_m, b_i, a_vp, b_vp,
+        a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
+
+
 def block_vp_matmul_ref(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,

@@ -208,10 +208,48 @@ def accum_init(acc_ref, ki):
 
 
 def accum_flush(o_ref, acc_ref, ki, nk: int):
-    """Write the accumulator to the output tile on the last k step."""
+    """Write the accumulator to the output tile on the last k step.
+
+    The reshape lets batched kernels keep a 2-D (bm, bn) accumulator while
+    writing a (1, bm, bn) output block — a no-op for the unbatched kernels
+    whose output tile already matches the accumulator shape.
+    """
     @pl.when(ki == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+def batched_matmul_grid(
+    nb: int, nm: int, nn: int, nk: int,
+    bm: int, bk: int, bn: int,
+    a_copies: int = 1, b_copies: int = 1,
+):
+    """Grid + block specs for a batch-gridded (G, M, K) x (G, K, N) matmul.
+
+    This is the truly-batched kernel contract: the grid gains a LEADING
+    batch dimension, so each batch element runs its own (M, K) x (K, N)
+    tile program — no folding of the batch into the row axis and no
+    masked-diagonal waste.  Grid order is (batch, m, n, k) with k innermost
+    (the accumulator idiom needs the k steps of one output tile to be
+    consecutive); batch/m/n are all "parallel", k is "arbitrary".
+
+    `a_copies` / `b_copies` give the number of identically-tiled tensors
+    riding each operand's index map — the plane kernels pass 2 per operand
+    (significand + exponent-index), the fused float kernel passes 1.
+
+    Index-map lambdas take `*_` trailing args so the same specs work under
+    `PrefetchScalarGridSpec` (scalar refs are appended to index-map args).
+    """
+    grid = (nb, nm, nn, nk)
+    a_spec = pl.BlockSpec(
+        (1, bm, bk), lambda b, mi, ni, ki, *_: (b, mi, ki))
+    b_spec = pl.BlockSpec(
+        (1, bk, bn), lambda b, mi, ni, ki, *_: (b, ki, ni))
+    in_specs = [a_spec] * a_copies + [b_spec] * b_copies
+    out_specs = pl.BlockSpec(
+        (1, bm, bn), lambda b, mi, ni, ki, *_: (b, mi, ni))
+    semantics = ("parallel", "parallel", "parallel", "arbitrary")
+    return grid, in_specs, out_specs, semantics
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,88 @@ def _vp_matmul_kernel(
     sub.accum_flush(o_ref, acc_ref, ki, nk)
 
 
+def _vp_matmul_batched_kernel(
+    # scalar-prefetch operands (SMEM)
+    a_act_ref, b_act_ref,
+    # tensor operands (VMEM tiles)
+    a_m_ref, a_i_ref, b_m_ref, b_i_ref,
+    # outputs / scratch
+    o_ref, acc_ref,
+    *, a_fmt: VPFormat, b_fmt: VPFormat, nk: int, cspade: bool, dtype,
+):
+    ki = pl.program_id(3)
+    sub.accum_init(acc_ref, ki)
+
+    def _compute():
+        a = sub.dequant_cascade(a_m_ref[0], a_i_ref[0], a_fmt, dtype)
+        b = sub.dequant_cascade(b_m_ref[0], b_i_ref[0], b_fmt, dtype)
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    if cspade:
+        gi, mi, ni = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        active = (a_act_ref[gi, mi, ki] | b_act_ref[gi, ki, ni]) != 0
+        pl.when(active)(_compute)
+    else:
+        _compute()
+
+    sub.accum_flush(o_ref, acc_ref, ki, nk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_fmt", "b_fmt", "interpret", "blocks", "out_dtype"),
+)
+def vp_matmul_batched_pallas(
+    a_m, a_i, b_m, b_i,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act=None, b_act=None,
+    interpret: bool = False,
+    blocks=(BM, BK, BN),
+    out_dtype=jnp.float32,
+):
+    """Truly-batched VP x VP -> f32 matmul over a leading batch grid dim.
+
+    a: (G, M, K) planes, b: (G, K, N) planes -> (G, M, N).  Every batch
+    element g runs its own (M, K) x (K, N) tile program on the
+    (batch, m, n, k) grid — the batch is never folded into the row axis,
+    so there is no masked-diagonal FLOP waste (see mimo/mvm_engine.py).
+
+    `a_act` (G, M/bm, K/bk) / `b_act` (G, K/bk, N/bn) int32 CSPADE
+    tile-activity flags (None disables the skip).  M/K/N must be
+    tile-multiples (ops.py pads); G is the grid's leading axis and needs
+    no padding.
+    """
+    (bm, bk, bn) = blocks
+    G, M, K = a_m.shape
+    _, _, N = b_m.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    cspade = a_act is not None
+    if not cspade:
+        a_act = jnp.ones((G, nm, nk), jnp.int32)
+        b_act = jnp.ones((G, nk, nn), jnp.int32)
+
+    kernel = functools.partial(
+        _vp_matmul_batched_kernel,
+        a_fmt=a_fmt, b_fmt=b_fmt, nk=nk, cspade=cspade, dtype=jnp.float32,
+    )
+    grid, in_specs, out_specs, semantics = sub.batched_matmul_grid(
+        G, nm, nn, nk, bm, bk, bn, a_copies=2, b_copies=2)
+    return sub.vp_pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((G, M, N), out_dtype),
+        scratch_shapes=[sub.vmem((bm, bn), jnp.float32)],
+        num_scalar_prefetch=2,
+        dimension_semantics=semantics,
+        interpret=interpret,
+    )(a_act, b_act, a_m, a_i, b_m, b_i)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("a_fmt", "b_fmt", "interpret", "blocks", "out_dtype"),

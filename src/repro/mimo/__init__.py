@@ -4,12 +4,19 @@ from .channel import ChannelConfig, generate_channels, awgn, steering
 from .beamspace import dft_matrix, to_beamspace, from_beamspace
 from .lmmse import lmmse_matrix, equalize
 from .equalizer import EqualizerSpec, table1_specs, calibrate, equalize_quantized
-from . import sim, cspade
+from . import sim, cspade, ofdm
+from .ofdm import (
+    OFDMConfig, WidebandCalibrator, WidebandEnsemble,
+    generate_wideband_channels, make_wideband_ensemble, equalize_wideband,
+)
 
 __all__ = [
     "ChannelConfig", "generate_channels", "awgn", "steering",
     "dft_matrix", "to_beamspace", "from_beamspace",
     "lmmse_matrix", "equalize",
     "EqualizerSpec", "table1_specs", "calibrate", "equalize_quantized",
-    "sim", "cspade",
+    "OFDMConfig", "WidebandCalibrator", "WidebandEnsemble",
+    "generate_wideband_channels", "make_wideband_ensemble",
+    "equalize_wideband",
+    "sim", "cspade", "ofdm",
 ]

@@ -201,3 +201,30 @@ def calibrate_specs(specs, ens: Ensemble):
                 else (ens.w_ant, ens.y_ant))
         out.append(calibrate(spec, w, y))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Golden statistics (regression anchor for kernel/format refactors)
+# ---------------------------------------------------------------------------
+
+def golden_stats(seed: int = 0, n: int = 128, snr_db: float = 20.0
+                 ) -> Dict[str, float]:
+    """Deterministic scalar summary of the Fig. 7 / Fig. 8 reproduction.
+
+    One fixed-seed ensemble reduced to a handful of floats: beamspace/
+    antenna kurtosis and the NMSE curve endpoints.  The golden regression
+    test (tests/test_golden_sim.py) pins these values so kernel or format
+    refactors cannot silently drift the paper's reproduction.
+    """
+    ens = make_ensemble(jax.random.PRNGKey(seed), ChannelConfig(), n, snr_db)
+    nm = nmse_vs_bitwidth(ens, widths=(6, 8, 10))
+    return {
+        "kurtosis_y_beam": pdf_stats(ens.y_beam)["kurtosis"],
+        "kurtosis_w_beam": pdf_stats(ens.w_beam)["kurtosis"],
+        "kurtosis_y_ant": pdf_stats(ens.y_ant)["kurtosis"],
+        "nmse_ant_w6": nm["antenna"][6],
+        "nmse_ant_w10": nm["antenna"][10],
+        "nmse_beam_w6": nm["beamspace"][6],
+        "nmse_beam_w10": nm["beamspace"][10],
+        "bit_gap": bitwidth_gap(nm),
+    }

@@ -31,6 +31,48 @@ def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+# ---------------------------------------------------------------------------
+# Wideband OFDM: subcarrier-axis data parallelism (mimo/ofdm.py)
+# ---------------------------------------------------------------------------
+
+def subcarrier_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D device mesh with a single "sc" (subcarrier) axis.
+
+    The wideband equalizer is embarrassingly parallel across subcarriers
+    (independent per-subcarrier MVM batches), so the fleet layout is pure
+    data parallelism over the band: each device owns a contiguous slab of
+    subcarriers and runs the batched VP kernel on its slab.
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ("sc",))
+
+
+def shard_over_subcarriers(fn, mesh: Optional[Mesh] = None,
+                           n_subcarriers: Optional[int] = None):
+    """shard_map `fn` over the leading subcarrier axis of its args.
+
+    `fn` maps (S_local, ...) arrays to (S_local, ...) arrays (the flat
+    wideband path in mimo/ofdm.py).  Inputs/outputs are sharded over the
+    mesh's "sc" axis; every other dim is replicated.  When the subcarrier
+    count does not divide the mesh (or the mesh is a single device) this
+    degrades gracefully to running `fn` unsharded — callers never need a
+    divisibility check on the serving path.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    if mesh is None:
+        mesh = subcarrier_mesh()
+    n_dev = mesh.shape["sc"]
+    if n_dev == 1 or (n_subcarriers is not None and n_subcarriers % n_dev):
+        return fn
+    spec = PartitionSpec("sc")
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
+
+
 def tp_size(mesh: Mesh) -> int:
     return mesh.shape["model"]
 

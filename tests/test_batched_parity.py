@@ -1,0 +1,161 @@
+"""Backend-parity matrix for the truly-batched VP kernel grid.
+
+The batched grid (PR 2) must be a pure FLOP-count optimization: every
+cell of the (backend x fusion x engine-mode) matrix below is pinned
+BIT-IDENTICAL — same quantize cascades, same f32 tile contractions, so
+there is no tolerance anywhere in this file.
+
+  * op level: batched kernels vs per-slice unbatched kernels vs ref
+    oracles, including ragged (non-tile-multiple) shapes and G=1;
+  * engine level: mode="batched" vs the legacy masked-diagonal fold
+    (mode="masked"), fused and unfused, ref and interpret backends,
+    n in {1, 3, 8} realizations;
+  * CSPADE: batched per-(batch, tile) masks vs the ref muting oracle.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import FXPFormat, VPFormat
+from repro.kernels import ops, ref
+from repro.mimo import ChannelConfig, table1_specs
+from repro.mimo.sim import make_ensemble, calibrate_specs
+from repro.mimo.mvm_engine import equalize_vp_kernel, mvm_flops
+
+W_FXP, W_VP = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+Y_FXP, Y_VP = FXPFormat(9, 1), VPFormat(7, (1, -1))
+
+
+def _operands(G, M, K, N, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_t(2, (G, M, K)).clip(-8, 8) * 0.01,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_t(2, (G, K, N)).clip(-8, 8), jnp.float32)
+    return a, b
+
+
+@pytest.fixture(scope="module")
+def ens_spec():
+    ens = make_ensemble(jax.random.PRNGKey(2), ChannelConfig(), 8, 10.0)
+    specs = {s.name: s for s in calibrate_specs(table1_specs(), ens)}
+    return ens, specs["B-VP"]
+
+
+# ---------------------------------------------------------------------------
+# Op level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 16, 64, 2), (5, 16, 64, 2),
+                                   (3, 13, 50, 1)])
+@pytest.mark.parametrize("interpret", [None, True],
+                         ids=["ref", "interpret"])
+def test_batched_fused_equals_unfused_equals_ref(shape, interpret):
+    G, M, K, N = shape
+    blocks = (16, 64, 2)
+    a, b = _operands(G, M, K, N)
+    fused = ops.vp_quant_matmul_batched(
+        a, b, W_FXP, W_VP, Y_FXP, Y_VP, blocks=blocks, interpret=interpret)
+    a_m, a_i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    b_m, b_i = ops.vp_quant(b, Y_FXP, Y_VP, interpret=interpret)
+    unfused = ops.vp_matmul_batched(
+        a_m, a_i, b_m, b_i, W_VP, Y_VP, blocks=blocks, interpret=interpret)
+    oracle = ref.vp_quant_matmul_batched_ref(
+        a, b, W_FXP, W_VP, Y_FXP, Y_VP, tiles=blocks)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+def test_batched_equals_per_slice_unbatched(interpret):
+    G, M, K, N = 4, 16, 64, 2
+    blocks = (16, 64, 2)
+    a, b = _operands(G, M, K, N, seed=3)
+    a_m, a_i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    b_m, b_i = ops.vp_quant(b, Y_FXP, Y_VP, interpret=interpret)
+    batched = np.asarray(ops.vp_matmul_batched(
+        a_m, a_i, b_m, b_i, W_VP, Y_VP, blocks=blocks, interpret=interpret))
+    for g in range(G):
+        one = np.asarray(ops.vp_matmul(
+            a_m[g], a_i[g], b_m[g], b_i[g], W_VP, Y_VP,
+            blocks=blocks, interpret=interpret))
+        np.testing.assert_array_equal(batched[g], one)
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+def test_batched_cspade_masks_match_oracle(interpret):
+    G, M, K, N = 6, 16, 64, 2
+    blocks = (16, 64, 2)
+    a, b = _operands(G, M, K, N, seed=5)
+    a_m, a_i = ops.vp_quant(a, W_FXP, W_VP)
+    b_m, b_i = ops.vp_quant(b, Y_FXP, Y_VP)
+    a_deq = ref.vp_dequant_ref(a_m, a_i, W_VP)
+    b_deq = ref.vp_dequant_ref(b_m, b_i, Y_VP)
+    # Aggressive thresholds so some (batch, tile) pairs actually mute.
+    ta = float(jnp.quantile(jnp.abs(a_deq).reshape(G, -1).max(1), 0.5))
+    tb = float(jnp.quantile(jnp.abs(b_deq).reshape(G, -1).max(1), 0.5))
+    a_act, b_act = ref.cspade_tile_masks_batched(a_deq, b_deq, *blocks, ta, tb)
+    assert a_act.shape == (G, 1, 1) and b_act.shape == (G, 1, 1)
+    got = ops.vp_matmul_batched(
+        a_m, a_i, b_m, b_i, W_VP, Y_VP, a_act=a_act, b_act=b_act,
+        blocks=blocks, interpret=interpret)
+    want = ref.vp_matmul_batched_ref(
+        a_m, a_i, b_m, b_i, W_VP, Y_VP, a_act=a_act, b_act=b_act,
+        tiles=blocks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_mask_shape_validation():
+    G, M, K, N = 2, 16, 64, 2
+    a, b = _operands(G, M, K, N)
+    bad = jnp.ones((G, 2, 2), jnp.int32)
+    with pytest.raises(ValueError, match="CSPADE"):
+        ops.vp_matmul_batched(
+            *ops.vp_quant(a, W_FXP, W_VP), *ops.vp_quant(b, Y_FXP, Y_VP),
+            W_VP, Y_VP, a_act=bad, b_act=bad, blocks=(16, 64, 2))
+
+
+# ---------------------------------------------------------------------------
+# Engine level: batched mode vs the legacy masked-diagonal fold
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 3, 8])
+@pytest.mark.parametrize("fused", [False, True], ids=["unfused", "fused"])
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+def test_engine_batched_bitidentical_to_masked(ens_spec, n, fused, interpret):
+    ens, spec = ens_spec
+    w, y = ens.w_beam[:n], ens.y_beam[:n]
+    s_batched = equalize_vp_kernel(
+        spec, w, y, mode="batched", fused=fused, interpret=interpret)
+    s_masked = equalize_vp_kernel(
+        spec, w, y, mode="masked", fused=fused, interpret=interpret)
+    assert s_batched.shape == (n, spec_U(ens))
+    np.testing.assert_array_equal(np.asarray(s_batched), np.asarray(s_masked))
+
+
+def spec_U(ens):
+    return ens.w_beam.shape[1]
+
+
+def test_engine_default_dispatch_bitidentical(ens_spec):
+    """The fused=None policy may pick different kernels per mode; values
+    must still agree bit for bit."""
+    ens, spec = ens_spec
+    s_batched = equalize_vp_kernel(spec, ens.w_beam, ens.y_beam,
+                                   mode="batched")
+    s_masked = equalize_vp_kernel(spec, ens.w_beam, ens.y_beam,
+                                  mode="masked")
+    np.testing.assert_array_equal(np.asarray(s_batched), np.asarray(s_masked))
+
+
+def test_engine_rejects_unknown_mode(ens_spec):
+    ens, spec = ens_spec
+    with pytest.raises(ValueError, match="mode"):
+        equalize_vp_kernel(spec, ens.w_beam, ens.y_beam, mode="turbo")
+
+
+def test_flop_accounting_masked_overhead():
+    """The whole point of the batched grid: masked does n x the FLOPs."""
+    n, U, B = 16, 8, 64
+    assert mvm_flops(n, U, B, "batched") == 8 * n * U * B
+    assert mvm_flops(n, U, B, "masked") == n * mvm_flops(n, U, B, "batched")

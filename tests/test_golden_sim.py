@@ -1,0 +1,54 @@
+"""Golden regression: pinned Fig. 7 / Fig. 8 reproduction statistics.
+
+`sim.golden_stats` reduces a fixed-seed ensemble to a handful of floats
+(beamspace kurtosis, NMSE curve endpoints, the bitwidth gap).  The values
+below were produced at PR 2 on the CPU ref path; kernel or format-layer
+refactors that change quantization numerics move them by far more than
+the tolerance, while backend/BLAS noise stays well inside it.
+
+If a change moves these numbers ON PURPOSE (e.g. a channel-model fix),
+re-pin them in the same commit and say why in its message.
+"""
+import numpy as np
+import pytest
+
+from repro.mimo.sim import golden_stats
+
+GOLDEN = {
+    "kurtosis_y_beam": 8.97633171081543,
+    "kurtosis_w_beam": 217.68136596679688,
+    "kurtosis_y_ant": -0.15325212478637695,
+    "nmse_ant_w6": 0.011574624197438316,
+    "nmse_ant_w10": 3.850493708403612e-05,
+    "nmse_beam_w6": 0.017346624633117473,
+    "nmse_beam_w10": 0.0001826580368721932,
+    "bit_gap": 0.7244533333406231,
+}
+
+
+@pytest.fixture(scope="module")
+def stats():
+    return golden_stats(seed=0, n=128)
+
+
+def test_golden_keys(stats):
+    assert set(stats) == set(GOLDEN)
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_golden_value(stats, key):
+    got, want = stats[key], GOLDEN[key]
+    np.testing.assert_allclose(
+        got, want, rtol=2e-3, atol=1e-8,
+        err_msg=f"{key} drifted from the pinned Fig. 7/8 reproduction")
+
+
+def test_golden_orderings(stats):
+    """Structural claims that must survive any re-pin: beamspace is
+    spikier than antenna domain (Fig. 7) and needs more bits at equal
+    NMSE (Fig. 8)."""
+    assert stats["kurtosis_y_beam"] > stats["kurtosis_y_ant"] + 1.0
+    assert stats["kurtosis_w_beam"] > stats["kurtosis_y_beam"]
+    assert stats["nmse_beam_w6"] > stats["nmse_ant_w6"]
+    assert stats["nmse_ant_w10"] < stats["nmse_ant_w6"]
+    assert stats["bit_gap"] > 0.0

@@ -1,0 +1,115 @@
+"""Wideband OFDM pipeline tests: channels, calibration cache, execution
+paths (flat / vmap / shard_map) and end-to-end NMSE/BER sanity."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.mimo import (
+    ChannelConfig, OFDMConfig, WidebandCalibrator,
+    generate_wideband_channels, make_wideband_ensemble, equalize_wideband,
+    table1_specs,
+)
+from repro.mimo.lmmse import equalize
+from repro.mimo.ofdm import wideband_nmse, wideband_ber
+
+CFG = ChannelConfig()
+OFDM = OFDMConfig(n_subcarriers=8, n_taps=3)
+
+
+@pytest.fixture(scope="module")
+def wideband():
+    ens = make_wideband_ensemble(jax.random.PRNGKey(0), CFG, OFDM, 16, 20.0)
+    base = next(s for s in table1_specs() if s.name == "B-VP")
+    cal = WidebandCalibrator(base)
+    return ens, cal, cal.specs_for(ens)
+
+
+def test_wideband_channel_shapes_and_power():
+    h = generate_wideband_channels(
+        jax.random.PRNGKey(1), CFG, OFDM, 8)
+    assert h.shape == (OFDM.S, 8, CFG.B, CFG.U)
+    # Unit-total-power PDP keeps the per-antenna gain convention:
+    # E[|H[s]|^2] ~ 1 per entry, uniformly across the band.
+    p = np.asarray(jnp.mean(jnp.abs(h) ** 2, axis=(1, 2, 3)))
+    assert np.all(p > 0.5) and np.all(p < 2.0), p
+
+
+def test_wideband_channel_frequency_correlation():
+    """Adjacent subcarriers are correlated, far ones less — the DFT of a
+    short tapped-delay line, not i.i.d. redraws per subcarrier."""
+    ofdm = OFDMConfig(n_subcarriers=16, n_taps=2)
+    h = generate_wideband_channels(jax.random.PRNGKey(2), CFG, ofdm, 8)
+    v = np.asarray(h).reshape(ofdm.S, -1)
+
+    def corr(i, j):
+        a, b = v[i], v[j]
+        return abs(np.vdot(a, b)) / (np.linalg.norm(a) * np.linalg.norm(b))
+
+    near = np.mean([corr(s, s + 1) for s in range(ofdm.S - 1)])
+    far = corr(0, ofdm.S // 2)
+    assert near > 0.8, near
+    assert far < near, (far, near)
+
+
+def test_calibrator_caches_and_gains_vary(wideband):
+    ens, cal, specs = wideband
+    assert cal.cache_sizes[0] == ens.S
+    # Repeated calls hit the cache (same objects back).
+    again = cal.specs_for(ens)
+    assert all(a is b for a, b in zip(specs, again))
+    # Beamspace statistics drift across the band -> per-subcarrier gains.
+    assert len({s.w_gain for s in specs}) > 1
+
+
+def test_vp_param_search_cached_and_sane(wideband):
+    ens, cal, _ = wideband
+    fmt = cal.search_vp_format(0, ens.w_beam[0], M=7, E=2)
+    assert fmt is cal.search_vp_format(0, ens.w_beam[0], M=7, E=2)
+    assert fmt.M == 7 and fmt.K == 4
+    # Sec. II-D endpoint rules against the base FXP(12, 11) grid.
+    assert fmt.max_f == 11 and fmt.min_f == 7 - (12 - 11) == 6
+
+
+def test_execution_paths_bitidentical(wideband):
+    ens, _, specs = wideband
+    s_flat = equalize_wideband(specs, ens.w_beam, ens.y_beam, how="flat")
+    s_vmap = equalize_wideband(specs, ens.w_beam, ens.y_beam, how="vmap")
+    s_shard = equalize_wideband(specs, ens.w_beam, ens.y_beam,
+                                how="shard_map")
+    assert s_flat.shape == (ens.S, 16, CFG.U)
+    np.testing.assert_array_equal(np.asarray(s_flat), np.asarray(s_vmap))
+    np.testing.assert_array_equal(np.asarray(s_flat), np.asarray(s_shard))
+
+
+def test_interpret_kernel_matches_ref(wideband):
+    ens, _, specs = wideband
+    s_ref = equalize_wideband(specs[:2], ens.w_beam[:2], ens.y_beam[:2])
+    s_int = equalize_wideband(specs[:2], ens.w_beam[:2], ens.y_beam[:2],
+                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_int))
+
+
+def test_wideband_nmse_close_to_float(wideband):
+    """B-VP quantization stays a small perturbation of float LMMSE over
+    the whole band (the paper's 'no noticeable degradation' claim)."""
+    ens, _, specs = wideband
+    s_vp = equalize_wideband(specs, ens.w_beam, ens.y_beam)
+    s_float = equalize(ens.w_beam, ens.y_beam)
+    nmse_vp = wideband_nmse(s_vp, ens.s)
+    nmse_float = wideband_nmse(s_float, ens.s)
+    assert nmse_vp < 5 * nmse_float, (nmse_vp, nmse_float)
+    assert wideband_ber(s_vp, ens.bits) <= wideband_ber(s_float, ens.bits) \
+        + 0.01
+
+
+def test_spec_count_and_format_validation(wideband):
+    ens, _, specs = wideband
+    with pytest.raises(ValueError, match="one spec per subcarrier"):
+        equalize_wideband(specs[:-1], ens.w_beam, ens.y_beam)
+    import dataclasses
+    from repro.core import VPFormat
+    rogue = dataclasses.replace(specs[1], w_vp=VPFormat(7, (11, 9, 8, 6)))
+    with pytest.raises(ValueError, match="static format"):
+        equalize_wideband([specs[0], rogue] + list(specs[2:]),
+                          ens.w_beam, ens.y_beam)

@@ -1,0 +1,219 @@
+"""Property-based conformance suite for the core VP format layer.
+
+Pins the algebra of the paper's Sec. II number format over RANDOM legal
+(M, E, f) configurations — not just the Table-I formats the rest of the
+suite exercises:
+
+  * round-trip exactness: any value on the VP grid survives
+    float -> FXP -> VP -> float bit-for-bit (VP multiplication being
+    exact, eq. 1, rests on this);
+  * truncation semantics: fxp2vp drops LSBs by arithmetic shift, so
+    quantization is a FLOOR on the selected local grid — q(x) <= x and
+    -q(-x) >= x bracket the FXP value within one local step (the
+    hardware's two's-complement truncation is exactly this asymmetry);
+  * sign symmetry on representable values (where no truncation happens
+    and the significand avoids the asymmetric -2^(M-1) endpoint);
+  * monotonicity: quantization never reorders inputs;
+  * dynamic-range coverage vs FXP: a VP(M, f) with E index bits beats
+    the same-total-bitwidth FXP(M+E) dynamic range whenever the exponent
+    spread exceeds E (the paper's headline claim), and saturates within
+    one coarse step of the reference FXP(W, F) ceiling.
+
+Runs under real `hypothesis` when installed, else under the functional
+fallback in tests/_minihypothesis.py (same strategies API).
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FXPFormat,
+    VPFormat,
+    default_vp_format,
+    fxp_quantize,
+    fxp2vp,
+    vp_fake_quant,
+    vp_to_float,
+)
+
+
+def _legal_config(W, M, E, F_off, no_overflow=False, max_gap=None):
+    """Map free integers onto a legal (fxp, vp) pair or None.
+
+    `no_overflow` additionally requires the Sec. II-D rule
+    W - F == M - min(f) (formats violating it — every E=0 format with
+    M < W — saturate large values and void the bracket/coverage claims).
+    `max_gap` bounds adjacent exponent-list gaps: quantization has dead
+    zones (and loses monotonicity) when f_k - f_{k+1} > M - 1, exactly
+    as in the hardware circuit.
+    """
+    if M >= W:
+        return None
+    fxp = FXPFormat(W, W - 1 - F_off)
+    try:
+        vp = default_vp_format(fxp, M, E)
+    except ValueError:
+        return None
+    if no_overflow and (fxp.W - fxp.F) != (vp.M - vp.min_f):
+        return None
+    if max_gap is not None and vp.K > 1:
+        if max(a - b for a, b in zip(vp.f, vp.f[1:])) > max_gap:
+            return None
+    return fxp, vp
+
+
+CONFIG = dict(
+    W=st.integers(6, 16),
+    M=st.integers(4, 10),
+    E=st.integers(0, 3),
+    F_off=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+
+
+def _representable(rng, fxp, vp, n=512, avoid_lo=False):
+    """Random exact VP values inside the FXP range (float32-exact)."""
+    lo = vp.raw_min + (1 if avoid_lo else 0)
+    m = rng.integers(lo, vp.raw_max + 1, n)
+    i = rng.integers(0, vp.K, n)
+    v = m * 2.0 ** (-np.asarray(vp.f)[i])
+    v = v[np.abs(v) <= fxp.max]
+    return v.astype(np.float32)
+
+
+@given(**CONFIG)
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_exact_on_representable(W, M, E, F_off, seed):
+    """float -> FXP -> VP -> float is the identity on the VP grid."""
+    cfg = _legal_config(W, M, E, F_off)
+    if cfg is None:
+        return
+    fxp, vp = cfg
+    v = _representable(np.random.default_rng(seed), fxp, vp)
+    if v.size == 0:
+        return
+    m, i = fxp2vp(fxp_quantize(jnp.asarray(v), fxp), fxp, vp)
+    back = np.asarray(vp_to_float(m, i, vp))
+    np.testing.assert_array_equal(back, v)
+
+
+@given(**CONFIG)
+@settings(max_examples=40, deadline=None)
+def test_truncation_floor_ceil_bracket(W, M, E, F_off, seed):
+    """q(x) <= x_fxp <= -q(-x), gap at most one LOCAL resolution step.
+
+    The hardware drops LSBs by arithmetic shift (floor towards -inf), so
+    negating the input flips the truncation direction; the two quantized
+    values bracket the FXP-rounded input within the coarser of the two
+    selected steps 2^-f_i.  Requires the no-overflow rule — saturating
+    formats clamp instead of truncate.
+    """
+    cfg = _legal_config(W, M, E, F_off, no_overflow=True)
+    if cfg is None:
+        return
+    fxp, vp = cfg
+    rng = np.random.default_rng(seed)
+    x = (rng.uniform(-1, 1, 1024) * fxp.max * 0.98).astype(np.float32)
+    raw = fxp_quantize(jnp.asarray(x), fxp)
+    x_fxp = np.asarray(raw, np.float64) * 2.0 ** (-fxp.F)
+    q_pos = np.asarray(vp_fake_quant(jnp.asarray(x), fxp, vp), np.float64)
+    q_neg = np.asarray(vp_fake_quant(jnp.asarray(-x), fxp, vp), np.float64)
+    _, i_pos = fxp2vp(raw, fxp, vp)
+    _, i_neg = fxp2vp(fxp_quantize(jnp.asarray(-x), fxp), fxp, vp)
+    f = np.asarray(vp.f)
+    step = np.maximum(2.0 ** -f[np.asarray(i_pos)],
+                      2.0 ** -f[np.asarray(i_neg)])
+    assert (q_pos <= x_fxp + 1e-12).all(), "floor exceeded the input"
+    assert (-q_neg >= x_fxp - 1e-12).all(), "ceil fell below the input"
+    assert ((-q_neg - q_pos) <= step + 1e-12).all(), "bracket wider than 1 ulp"
+
+
+@given(**CONFIG)
+@settings(max_examples=40, deadline=None)
+def test_sign_symmetry_on_representable(W, M, E, F_off, seed):
+    """q(-v) == -q(v) for exact values avoiding the -2^(M-1) endpoint.
+
+    Two's complement is asymmetric at raw_min (its negation is not
+    representable), so symmetry is claimed — and holds exactly — on the
+    symmetric sub-grid.
+    """
+    cfg = _legal_config(W, M, E, F_off)
+    if cfg is None:
+        return
+    fxp, vp = cfg
+    v = _representable(np.random.default_rng(seed), fxp, vp, avoid_lo=True)
+    if v.size == 0:
+        return
+    q_pos = np.asarray(vp_fake_quant(jnp.asarray(v), fxp, vp))
+    q_neg = np.asarray(vp_fake_quant(jnp.asarray(-v), fxp, vp))
+    np.testing.assert_array_equal(q_neg, -q_pos)
+
+
+@given(**CONFIG)
+@settings(max_examples=40, deadline=None)
+def test_quantization_monotone(W, M, E, F_off, seed):
+    """Sorted inputs stay sorted after VP fake-quant (no reordering).
+
+    Holds whenever adjacent exponent options overlap (gap <= M - 1) and
+    saturation clamps at the ends (no-overflow rule) — a wider gap opens
+    a dead zone where values just past the fine range truncate below the
+    fine-range ceiling, in the circuit as much as here.
+    """
+    cfg = _legal_config(W, M, E, F_off, no_overflow=True, max_gap=M - 1)
+    if cfg is None:
+        return
+    fxp, vp = cfg
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.uniform(-1, 1, 1024) * fxp.max * 1.1).astype(np.float32)
+    q = np.asarray(vp_fake_quant(jnp.asarray(x), fxp, vp))
+    assert (np.diff(q) >= 0).all(), "quantization reordered inputs"
+
+
+@given(**CONFIG)
+@settings(max_examples=40, deadline=None)
+def test_dynamic_range_vs_fxp(W, M, E, F_off, seed):
+    """VP dynamic range vs fixed point (the paper's headline claim).
+
+    (a) Against the same-total-bitwidth FXP(M+E, max_f): whenever the
+        exponent spread max_f - min_f exceeds E, the VP format covers a
+        STRICTLY larger max/resolution ratio at equal storage bits.
+    (b) Against the reference FXP(W, F) grid it quantizes: the VP ceiling
+        sits within one coarse step 2^-min_f of the FXP ceiling (the
+        Sec. II-D no-overflow rule leaves at most one coarse ulp on the
+        table).
+    """
+    del seed
+    cfg = _legal_config(W, M, E, F_off, no_overflow=True)
+    if cfg is None:
+        return
+    fxp, vp = cfg
+    # (a) equal-bitwidth comparison: DR = max / resolution.
+    dr_vp = vp.max / vp.resolution
+    fxp_same_bits = FXPFormat(M + vp.E, vp.max_f)
+    dr_fxp = fxp_same_bits.max / fxp_same_bits.scale
+    if vp.max_f - vp.min_f > vp.E:
+        assert dr_vp > dr_fxp, (
+            f"{vp} DR {dr_vp:.3g} <= FXP({M + vp.E}) DR {dr_fxp:.3g}")
+    # (b) coverage of the reference grid.
+    assert vp.max <= fxp.max + 1e-12
+    assert fxp.max - vp.max < 2.0 ** (-vp.min_f), (
+        f"{vp} saturates more than one coarse step below {fxp}")
+
+
+@given(seed=st.integers(0, 2**31 - 1), M=st.sampled_from([5, 7, 9]))
+@settings(max_examples=20, deadline=None)
+def test_vpformat_validation_rejects_illegal_lists(seed, M):
+    """Constructor invariants: |f| power of two, descending order."""
+    rng = np.random.default_rng(seed)
+    f3 = tuple(sorted(rng.choice(20, 3, replace=False) - 5, reverse=True))
+    try:
+        VPFormat(M, f3)
+        assert False, "|f|=3 accepted"
+    except ValueError:
+        pass
+    lo, hi = sorted(rng.choice(20, 2, replace=False) - 5)
+    try:
+        VPFormat(M, (int(lo), int(hi)))
+        assert False, "ascending list accepted"
+    except ValueError:
+        pass
