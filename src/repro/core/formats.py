@@ -101,8 +101,23 @@ class VPFormat:
 
     @property
     def bits_per_element(self) -> float:
-        """Storage cost per element: significand + index bits."""
+        """Information content per element: significand + index bits."""
         return self.M + self.E
+
+    @property
+    def storage_bits(self) -> int:
+        """HBM bits per element in the PACKED word layout (core.packing).
+
+        Sign + significand + exponent index bit-pack into one int8 when
+        M + E <= 8 (e.g. VP(7,[1,-1]): 7 + 1 = 8), one int16 when <= 16
+        (VP(7,[11,9,7,6]): 7 + 2 = 9), else int32 — versus 16 bits
+        minimum for the two-plane (int8 m + uint8 i) layout.
+        """
+        bits = self.M + self.E
+        for width in (8, 16, 32):
+            if bits <= width:
+                return width
+        raise ValueError(f"M + E = {bits} exceeds the widest packed word")
 
     @property
     def max(self) -> float:

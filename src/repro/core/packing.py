@@ -1,0 +1,66 @@
+"""Packed VP words: sign+significand+exponent-index in ONE machine word.
+
+The two-plane layout (int8 significand plane + uint8 index plane) ships
+every VP element as two HBM bytes even though a paper-class format only
+carries M + E <= 16 information bits.  Packing both fields into a single
+integer word — the software analogue of how fixed-posit packs all fields
+into one word (Gohil et al.) — halves the HBM traffic whenever the format
+fits one byte (M + E <= 8, e.g. the Table-I y format VP(7,[1,-1])) and
+never costs more than the two planes did.
+
+Word layout (``w`` is two's complement, E = index bitwidth):
+
+        bit:  [ S-1 ............ E | E-1 ...... 0 ]
+               sign + significand m  exponent index i
+
+i.e. ``w = (m << E) | i`` = ``m * 2^E + i`` (the low E bits of ``m << E``
+are zero, so bit-or IS addition).  Unpacking is two machine ops:
+``m = w >> E`` (arithmetic shift — the sign rides the top bit for free)
+and ``i = w & (K - 1)``; both are exactly what `substrate.unpack_cascade`
+runs in-kernel.
+
+These functions are pure jnp and serve as the round-trip oracle for the
+in-kernel unpack path (tests/test_packing.py property-tests
+``unpack_vp(pack_vp(m, i)) == (m, i)`` over random formats).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .formats import VPFormat
+
+
+def storage_dtype(fmt: VPFormat):
+    """The packed-word dtype for a format: int8 / int16 / int32."""
+    bits = fmt.storage_bits
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+def pack_vp(m, i, fmt: VPFormat):
+    """Pack (significand, index) planes into one packed-word plane.
+
+    `m` int (any int dtype) in [raw_min, raw_max], `i` int in [0, K);
+    returns ``(m << E) | i`` in `storage_dtype(fmt)` — one byte per
+    element when M + E <= 8, two when <= 16.
+    """
+    E = fmt.E
+    w = jnp.left_shift(m.astype(jnp.int32), E)
+    w = jnp.bitwise_or(w, i.astype(jnp.int32))
+    return w.astype(storage_dtype(fmt))
+
+
+def unpack_vp(w, fmt: VPFormat):
+    """Invert `pack_vp`: packed words -> (int32 significand, int32 index).
+
+    The arithmetic right shift sign-extends the significand; the mask
+    K - 1 extracts the index from the low bits (two's-complement low bits
+    are position-valued regardless of sign).
+    """
+    wi = w.astype(jnp.int32)
+    m = jnp.right_shift(wi, fmt.E)
+    i = jnp.bitwise_and(wi, fmt.K - 1)
+    return m, i

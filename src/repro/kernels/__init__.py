@@ -10,8 +10,8 @@ from .ops import (
     vp_quant, vp_dequant, vp_matmul, block_vp_matmul, vp_quant_matmul,
     vp_matmul_batched, vp_quant_matmul_batched,
 )
-from . import ref, ops, substrate
+from . import autotune, ref, ops, substrate
 
 __all__ = ["vp_quant", "vp_dequant", "vp_matmul", "block_vp_matmul",
            "vp_quant_matmul", "vp_matmul_batched", "vp_quant_matmul_batched",
-           "ref", "ops", "substrate"]
+           "autotune", "ref", "ops", "substrate"]

@@ -1,0 +1,282 @@
+"""Block-size / dispatch autotuner with a persistent on-disk cache.
+
+Every matmul kernel in this package takes a `(bm, bk, bn)` tile triple,
+and the right triple is wildly shape-dependent: BENCH_pr2 measured a 13x
+wall-clock swing between block sizes on the fused kernel at one shape,
+and the hardcoded 256^3 default padded the MVM engine's (2U, B) x (B, 2)
+operands up to full 256^3 tiles.  This module supplies the missing
+policy, at two levels:
+
+  * `heuristic_blocks` — the zero-measurement default: each axis clamps
+    to the next power of two of the operand dimension (capped at the 256
+    base), so a tile NEVER exceeds the padded operand shape.  Small
+    shapes get one snug tile per axis instead of a 256^3 pad-out; big
+    shapes keep the standard tiling.  This is shape-aware format/tile
+    selection in the sense of Sentieys & Menard — static, cheap, always
+    safe.
+  * `tune` — the measured path: time a candidate set of block triples on
+    the real kernel callable (min over repeats) and persist the winner
+    in an on-disk JSON cache keyed by (kernel, shape, formats, backend).
+    Serving processes (`resolve_blocks`) then hit the cache and launch
+    the measured-best tiling with zero per-call overhead.
+
+Cache location: `$REPRO_AUTOTUNE_CACHE` if set, else
+`~/.cache/repro-vp/autotune.json`.  Delete the file (or call
+`clear_cache()`) to re-tune from scratch; entries are keyed on
+everything that affects kernel timing, so stale entries can only ever
+cost speed, never correctness.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+Blocks = Tuple[int, int, int]
+
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+_BASE = (256, 256, 256)
+
+_lock = threading.Lock()
+# path -> {key: [bm, bk, bn]}; in-memory layer over the JSON file.
+_caches: Dict[str, Dict[str, list]] = {}
+
+
+# ---------------------------------------------------------------------------
+# Cache plumbing
+# ---------------------------------------------------------------------------
+
+def cache_path() -> str:
+    """Resolve the on-disk cache file (env override, else ~/.cache)."""
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-vp", "autotune.json")
+
+
+def _load(path: str) -> Dict[str, list]:
+    with _lock:
+        if path not in _caches:
+            data: Dict[str, list] = {}
+            try:
+                with open(path) as f:
+                    raw = json.load(f)
+                data = {k: list(v) for k, v in raw.items()
+                        if isinstance(v, (list, tuple)) and len(v) == 3}
+            except (OSError, ValueError):
+                pass  # missing or corrupt cache: start empty
+            _caches[path] = data
+        return _caches[path]
+
+
+def _save(path: str, data: Dict[str, list]) -> None:
+    """Atomic write (tmp + rename) so concurrent tuners never torn-read."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear_cache() -> None:
+    """Drop the cache file and the in-memory layer (cold start)."""
+    path = cache_path()
+    with _lock:
+        _caches.pop(path, None)
+    try:
+        os.remove(path)
+    except OSError:
+        pass
+
+
+def make_key(
+    kernel: str,
+    shape: Sequence[int],
+    formats: Sequence,
+    backend: str,
+) -> str:
+    """Cache key: everything that affects which tiling wins.
+
+    `shape` is the logical operand shape ((M, K, N) or (G, M, K, N));
+    `formats` any sequence of FXPFormat/VPFormat (their reprs are stable
+    and fully determine the in-kernel cascade structure).
+    """
+    fmts = ",".join(repr(f) for f in formats)
+    dims = "x".join(str(int(d)) for d in shape)
+    return f"{kernel}|{dims}|{fmts}|{backend}"
+
+
+def get_cached(key: str) -> Optional[Blocks]:
+    v = _load(cache_path()).get(key)
+    return tuple(v) if v else None
+
+
+def record(key: str, blocks: Blocks) -> None:
+    """Persist one entry, merging with what is on disk RIGHT NOW.
+
+    Concurrent tuners each write the union of the current file and their
+    own entries (read-merge-write under the process lock + atomic
+    rename).  The re-read narrows the lost-update window to the gap
+    between our read and our rename — a peer's write landing exactly in
+    that gap can still be dropped (no cross-process file lock); losing
+    an entry only costs a re-tune, never correctness.
+    """
+    path = cache_path()
+    mem = _load(path)
+    with _lock:
+        fresh: Dict[str, list] = {}
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            fresh = {k: list(v) for k, v in raw.items()
+                     if isinstance(v, (list, tuple)) and len(v) == 3}
+        except (OSError, ValueError):
+            pass
+        fresh.update(mem)
+        fresh[key] = list(blocks)
+        _caches[path] = fresh
+        _save(path, fresh)
+
+
+# ---------------------------------------------------------------------------
+# Heuristic default (no measurement): never tile beyond the padded shape
+# ---------------------------------------------------------------------------
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def heuristic_blocks(
+    M: int, K: int, N: int, base: Blocks = _BASE,
+) -> Blocks:
+    """Shape-clamped default tiling.
+
+    Each axis: `min(base, next_pow2(dim))` — a dimension smaller than the
+    base block gets exactly one power-of-two tile covering it (the pad is
+    < 2x, versus up to 128x under the hardcoded 256^3), while large
+    dimensions keep the standard base tile.
+    """
+    return (
+        min(base[0], _pow2_at_least(max(M, 1))),
+        min(base[1], _pow2_at_least(max(K, 1))),
+        min(base[2], _pow2_at_least(max(N, 1))),
+    )
+
+
+def _native_floor(blocks: Blocks) -> Blocks:
+    """Mosaic-safe minimum tile for the TPU-native backend.
+
+    The f32 min tile is (8 sublanes, 128 lanes); a heuristic tile below
+    that on the lane axes (bk for the A tile, bn for B and the output)
+    risks failing to lower or relayouting badly.  Interpret/ref backends
+    have no such constraint and keep the snug clamp.
+    """
+    bm, bk, bn = blocks
+    return (max(bm, 8), max(bk, 128), max(bn, 128))
+
+
+def resolve_blocks(
+    kernel: str,
+    shape: Sequence[int],
+    formats: Sequence,
+    backend: str,
+    blocks: Optional[Blocks] = None,
+    use_cache: bool = True,
+) -> Blocks:
+    """The one block-resolution policy for ops.py and the MIMO engines.
+
+    Explicit `blocks` win; otherwise a cache hit from a previous `tune`
+    run (measured on this backend, so trusted as-is); otherwise the
+    shape-clamped heuristic — floored to the Mosaic minimum tile on the
+    TPU-native backend.  `shape`'s last three entries are (M, K, N).
+    ``use_cache=False`` skips the cache layer: CSPADE-masked calls need
+    a DETERMINISTIC grid (their masks were not built on a tuned entry's
+    grid) but must still share this heuristic + native-floor policy.
+    """
+    if blocks is not None:
+        return tuple(blocks)
+    if use_cache:
+        cached = get_cached(make_key(kernel, shape, formats, backend))
+        if cached is not None:
+            return cached
+    M, K, N = (int(d) for d in shape[-3:])
+    h = heuristic_blocks(M, K, N)
+    return _native_floor(h) if backend == "native" else h
+
+
+# ---------------------------------------------------------------------------
+# Measured tuning
+# ---------------------------------------------------------------------------
+
+def default_candidates(M: int, K: int, N: int) -> Tuple[Blocks, ...]:
+    """Candidate tilings for a shape: the heuristic plus clamped
+    square-ish bases — small enough to time in seconds, wide enough to
+    cover the 13x swing observed across block sizes."""
+    cands = [heuristic_blocks(M, K, N)]
+    for b in (128, 256, 512):
+        cands.append(heuristic_blocks(M, K, N, base=(b, b, b)))
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return tuple(out)
+
+
+def tune(
+    kernel: str,
+    shape: Sequence[int],
+    formats: Sequence,
+    backend: str,
+    bench_fn: Callable[[Blocks], None],
+    candidates: Optional[Iterable[Blocks]] = None,
+    repeats: int = 3,
+) -> Blocks:
+    """Measure `bench_fn(blocks)` over candidates, persist + return the best.
+
+    `bench_fn` must run the kernel to completion (block_until_ready) for
+    the given block triple; the first call per candidate warms compile
+    caches and is discarded, then the MIN over `repeats` timed runs
+    scores it (min is the standard noise-robust statistic for
+    wall-clock).  The winner lands in the on-disk cache under
+    `make_key(...)`, so every later `resolve_blocks` call with the same
+    key launches it for free.
+    """
+    key = make_key(kernel, shape, formats, backend)
+    cached = get_cached(key)
+    if cached is not None:
+        return cached
+    M, K, N = (int(d) for d in shape[-3:])
+    cands = tuple(candidates) if candidates else default_candidates(M, K, N)
+    best, best_t = None, float("inf")
+    last_err: Optional[Exception] = None
+    for blocks in cands:
+        try:
+            bench_fn(blocks)  # warmup / compile
+            t = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                bench_fn(blocks)
+                t = min(t, time.perf_counter() - t0)
+        except Exception as e:  # a candidate that fails to lower just loses
+            last_err = e
+            continue
+        if t < best_t:
+            best, best_t = blocks, t
+    if best is None:
+        # EVERY candidate failed: the bench_fn itself is broken (wrong
+        # shapes/formats, mask-grid mismatch...).  Recording the untested
+        # heuristic as a "tuned winner" would hide that forever.
+        raise RuntimeError(
+            f"autotune: all {len(cands)} candidates failed for {key}; "
+            f"last error: {last_err!r}") from last_err
+    record(key, best)
+    return best

@@ -8,6 +8,23 @@ the dry-run lowers a graph with identical FLOP/byte structure.
 `interpret=True` forces the Pallas kernel body through the interpreter on
 any backend (used by the kernel tests); an explicit `interpret=False`
 means "don't interpret" and still falls back to the refs off-TPU.
+
+Two PR-3 layers live here:
+
+  * PACKED operands.  `vp_quant(..., packed=True)` emits one packed VP
+    word plane (`core.packing`) instead of the two-plane layout; the
+    matmul/dequant ops accept EITHER layout — pass the packed plane as
+    the significand argument with the index argument None.  Packed kernels
+    move half the HBM bytes; outputs are bit-identical (the unpack +
+    bit-assembled dequant reproduce the plane path exactly;
+    tests/test_packing.py pins it).
+  * AUTOTUNED blocks.  Every matmul op takes `blocks=None` by default and
+    resolves it through `kernels.autotune`: a persisted measured-best
+    tiling when one is cached for (kernel, shape, formats, backend), else
+    a shape-clamped heuristic that never tiles beyond the padded operand
+    shape — so small operands (the MVM engine's (2U, B) x (B, 2)) stop
+    padding up to 256^3 tiles.  CSPADE masks pin their grid: pass
+    explicit `blocks` alongside masks.
 """
 from __future__ import annotations
 
@@ -16,9 +33,10 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.formats import FXPFormat, VPFormat
-from . import ref, substrate
-from .vp_quant import vp_quant_pallas
-from .vp_dequant import vp_dequant_pallas
+from repro.core import packing as pk
+from . import autotune, ref, substrate
+from .vp_quant import vp_quant_pallas, vp_quant_packed_pallas
+from .vp_dequant import vp_dequant_pallas, vp_dequant_packed_pallas
 from .vp_matmul import vp_matmul_pallas, vp_matmul_batched_pallas
 from .vp_block_matmul import block_vp_matmul_pallas
 from .vp_quant_matmul import (
@@ -42,6 +60,31 @@ def _pad3(x, br, bc, value=0):
     if pr or pc:
         x = jnp.pad(x, ((0, 0), (0, pr), (0, pc)), constant_values=value)
     return x
+
+
+def _elementwise_block(R: int, C: int, backend: str) -> Tuple[int, int]:
+    """Shape-clamped tile for the elementwise (quant/dequant) kernels —
+    same policy as `autotune.heuristic_blocks`, two axes.  On the
+    TPU-native backend the tile is floored to the int8-plane Mosaic
+    minimum (32 sublanes, 128 lanes); interpret keeps the snug clamp.
+    """
+    b = autotune.heuristic_blocks(R, C, 1)
+    if backend == "native":
+        return max(b[0], 32), max(b[1], 128)
+    return b[0], b[1]
+
+
+def _resolve_blocks(kernel, shape, formats, backend, blocks, masks):
+    """Autotune-resolve `blocks=None`.
+
+    CSPADE masks pin their tile grid, so masked calls with `blocks=None`
+    resolve with `use_cache=False` — the deterministic heuristic (+
+    native floor) only, never a tuned cache entry, whose grid the masks
+    were not built on; `_check_masks` then validates the grid loudly
+    either way.
+    """
+    return autotune.resolve_blocks(
+        kernel, shape, formats, backend, blocks, use_cache=masks is None)
 
 
 def _check_masks(a_act, b_act, M, K, N, blocks):
@@ -84,35 +127,74 @@ def _check_masks_batched(a_act, b_act, G, M, K, N, blocks):
             f"(want {want_a}/{want_b}); rebuild the masks on this grid")
 
 
-def vp_quant(x, fxp: FXPFormat, vp: VPFormat, interpret: Optional[bool] = None):
-    """float tensor (any rank) -> (significand, index) planes, same shape."""
+def _unpack_pair(x_m, x_i, fmt: VPFormat):
+    """Either-layout normalization: (packed, None) -> planes, else pass."""
+    if x_i is None:
+        return pk.unpack_vp(x_m, fmt)
+    return x_m, x_i
+
+
+def vp_quant(x, fxp: FXPFormat, vp: VPFormat,
+             interpret: Optional[bool] = None, packed: bool = False):
+    """float tensor (any rank) -> VP-quantized planes, same shape.
+
+    ``packed=False``: (significand, index) two-plane layout.
+    ``packed=True``: ONE packed word plane (`core.packing` layout,
+    `vp.storage_bits` bits/element) — the layout every matmul op accepts
+    as (plane, None).
+    """
     backend = substrate.resolve_backend(interpret)
     shape = x.shape
     x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
     if backend == "ref":
+        if packed:
+            return ref.vp_quant_packed_ref(x2, fxp, vp).reshape(shape)
         m, i = ref.vp_quant_ref(x2, fxp, vp)
     else:
         R, C = x2.shape
-        xp = _pad2(x2, 256, 256)
+        blk = _elementwise_block(R, C, backend)
+        xp = _pad2(x2, *blk)
+        if packed:
+            w = vp_quant_packed_pallas(
+                xp, fxp, vp, interpret=(backend == "interpret"), block=blk)
+            return w[:R, :C].reshape(shape)
         m, i = vp_quant_pallas(
-            xp, fxp, vp, interpret=(backend == "interpret"))
+            xp, fxp, vp, interpret=(backend == "interpret"), block=blk)
         m, i = m[:R, :C], i[:R, :C]
     return m.reshape(shape), i.reshape(shape)
 
 
-def vp_dequant(m, i, vp: VPFormat, dtype=jnp.float32,
+def vp_dequant(m, i=None, vp: VPFormat = None, dtype=jnp.float32,
                interpret: Optional[bool] = None):
+    """(significand, index) planes — or packed words with ``i=None`` —
+    back to real values: ``vp_dequant(m, i, fmt)`` or
+    ``vp_dequant(w, None, fmt)``."""
+    if isinstance(i, VPFormat) or vp is None:
+        raise TypeError(
+            "vp_dequant takes (m, i, vp) for planes or (w, None, vp) for "
+            "packed words — the format is always the THIRD argument")
     backend = substrate.resolve_backend(interpret)
+    packed = i is None
     shape = m.shape
     m2 = m.reshape(-1, shape[-1]) if m.ndim != 2 else m
-    i2 = i.reshape(-1, shape[-1]) if i.ndim != 2 else i
     if backend == "ref":
-        out = ref.vp_dequant_ref(m2, i2, vp, dtype)
+        if packed:
+            out = ref.vp_dequant_packed_ref(m2, vp, dtype)
+        else:
+            i2 = i.reshape(-1, shape[-1]) if i.ndim != 2 else i
+            out = ref.vp_dequant_ref(m2, i2, vp, dtype)
     else:
         R, C = m2.shape
-        mp, ip = _pad2(m2, 256, 256), _pad2(i2, 256, 256)
-        out = vp_dequant_pallas(
-            mp, ip, vp, dtype, interpret=(backend == "interpret"))
+        blk = _elementwise_block(R, C, backend)
+        if packed:
+            out = vp_dequant_packed_pallas(
+                _pad2(m2, *blk), vp, dtype,
+                interpret=(backend == "interpret"), block=blk)
+        else:
+            i2 = i.reshape(-1, shape[-1]) if i.ndim != 2 else i
+            out = vp_dequant_pallas(
+                _pad2(m2, *blk), _pad2(i2, *blk), vp, dtype,
+                interpret=(backend == "interpret"), block=blk)
         out = out[:R, :C]
     return out.reshape(shape)
 
@@ -121,20 +203,51 @@ def vp_matmul(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,
     a_act=None, b_act=None,
-    blocks: Tuple[int, int, int] = (256, 256, 256),
+    blocks: Optional[Tuple[int, int, int]] = None,
     interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ):
-    """(M,K) x (K,N) VP matmul; CSPADE masks optional (tile grid = blocks)."""
+    """(M,K) x (K,N) VP matmul; CSPADE masks optional (tile grid = blocks).
+
+    Operands may be two-plane (m, i) pairs OR packed word planes (pass
+    the packed plane as `a_m`/`b_m` with `a_i`/`b_i` None); the packed
+    kernel path moves one HBM word per element.  `blocks=None` resolves
+    through the autotuner (cache, else shape-clamped heuristic).
+    """
     M, K = a_m.shape
     _, N = b_m.shape
-    _check_masks(a_act, b_act, M, K, N, blocks)
     backend = substrate.resolve_backend(interpret)
+    packed = a_i is None and b_i is None
+    # The operand layout changes the kernel body (and its HBM traffic),
+    # so packed and plane launches tune/cache independently.
+    blocks = _resolve_blocks(
+        "vp_matmul_packed" if packed else "vp_matmul",
+        (M, K, N), (a_fmt, b_fmt), backend, blocks, a_act)
+    _check_masks(a_act, b_act, M, K, N, blocks)
     if backend == "ref":
+        if packed:
+            return ref.vp_matmul_packed_ref(
+                a_m, b_m, a_fmt, b_fmt,
+                a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+        a_m, a_i = _unpack_pair(a_m, a_i, a_fmt)
+        b_m, b_i = _unpack_pair(b_m, b_i, b_fmt)
         return ref.vp_matmul_ref(
             a_m, a_i, b_m, b_i, a_fmt, b_fmt,
             a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    if (a_i is None) != (b_i is None):
+        # Mixed layouts: normalize to planes (no kernel for the mix).
+        a_m, a_i = _unpack_pair(a_m, a_i, a_fmt)
+        b_m, b_i = _unpack_pair(b_m, b_i, b_fmt)
+        packed = False
     bm, bk, bn = blocks
+    if packed:
+        ap, bp = _pad2(a_m, bm, bk), _pad2(b_m, bk, bn)
+        out = vp_matmul_pallas(
+            ap, None, bp, None, a_fmt, b_fmt,
+            a_act=a_act, b_act=b_act,
+            interpret=(backend == "interpret"), blocks=blocks,
+            out_dtype=out_dtype, packed=True)
+        return out[:M, :N]
     am, ai = _pad2(a_m, bm, bk), _pad2(a_i, bm, bk)
     bm_, bi = _pad2(b_m, bk, bn), _pad2(b_i, bk, bn)
     out = vp_matmul_pallas(
@@ -150,7 +263,7 @@ def vp_quant_matmul(
     a_fxp: FXPFormat, a_vp: VPFormat,
     b_fxp: FXPFormat, b_vp: VPFormat,
     a_act=None, b_act=None,
-    blocks: Tuple[int, int, int] = (256, 256, 256),
+    blocks: Optional[Tuple[int, int, int]] = None,
     interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ):
@@ -161,15 +274,18 @@ def vp_quant_matmul(
     CSPADE masks follow the `blocks` tile grid and require tile-aligned
     operands (mask calibration needs the planes anyway — see mvm_engine).
     """
-    bm, bk, bn = blocks
     M, K = a.shape
     _, N = b.shape
-    _check_masks(a_act, b_act, M, K, N, blocks)
     backend = substrate.resolve_backend(interpret)
+    blocks = _resolve_blocks(
+        "vp_quant_matmul", (M, K, N), (a_fxp, a_vp, b_fxp, b_vp),
+        backend, blocks, a_act)
+    _check_masks(a_act, b_act, M, K, N, blocks)
     if backend == "ref":
         return ref.vp_quant_matmul_ref(
             a, b, a_fxp, a_vp, b_fxp, b_vp,
             a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    bm, bk, bn = blocks
     ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
     out = vp_quant_matmul_pallas(
         ap, bp, a_fxp, a_vp, b_fxp, b_vp,
@@ -183,7 +299,7 @@ def vp_matmul_batched(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,
     a_act=None, b_act=None,
-    blocks: Tuple[int, int, int] = (256, 256, 256),
+    blocks: Optional[Tuple[int, int, int]] = None,
     interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ):
@@ -193,16 +309,39 @@ def vp_matmul_batched(
     batch grid dimension — the scalable replacement for folding G into the
     row axis and discarding off-diagonal columns.  CSPADE masks are per
     (batch, tile): a_act (G, M/bm, K/bk), b_act (G, K/bk, N/bn).
+    Packed-word operands: pass the packed planes with `a_i`/`b_i` None.
     """
     G, M, K = a_m.shape
     _, _, N = b_m.shape
-    _check_masks_batched(a_act, b_act, G, M, K, N, blocks)
     backend = substrate.resolve_backend(interpret)
+    packed = a_i is None and b_i is None
+    blocks = _resolve_blocks(
+        "vp_matmul_batched_packed" if packed else "vp_matmul_batched",
+        (G, M, K, N), (a_fmt, b_fmt), backend, blocks, a_act)
+    _check_masks_batched(a_act, b_act, G, M, K, N, blocks)
     if backend == "ref":
+        if packed:
+            return ref.vp_matmul_batched_packed_ref(
+                a_m, b_m, a_fmt, b_fmt,
+                a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+        a_m, a_i = _unpack_pair(a_m, a_i, a_fmt)
+        b_m, b_i = _unpack_pair(b_m, b_i, b_fmt)
         return ref.vp_matmul_batched_ref(
             a_m, a_i, b_m, b_i, a_fmt, b_fmt,
             a_act=a_act, b_act=b_act, tiles=blocks, out_dtype=out_dtype)
+    if (a_i is None) != (b_i is None):
+        a_m, a_i = _unpack_pair(a_m, a_i, a_fmt)
+        b_m, b_i = _unpack_pair(b_m, b_i, b_fmt)
+        packed = False
     bm, bk, bn = blocks
+    if packed:
+        ap, bp = _pad3(a_m, bm, bk), _pad3(b_m, bk, bn)
+        out = vp_matmul_batched_pallas(
+            ap, None, bp, None, a_fmt, b_fmt,
+            a_act=a_act, b_act=b_act,
+            interpret=(backend == "interpret"), blocks=blocks,
+            out_dtype=out_dtype, packed=True)
+        return out[:, :M, :N]
     am, ai = _pad3(a_m, bm, bk), _pad3(a_i, bm, bk)
     bm_, bi = _pad3(b_m, bk, bn), _pad3(b_i, bk, bn)
     out = vp_matmul_batched_pallas(
@@ -218,7 +357,7 @@ def vp_quant_matmul_batched(
     a_fxp: FXPFormat, a_vp: VPFormat,
     b_fxp: FXPFormat, b_vp: VPFormat,
     a_act=None, b_act=None,
-    blocks: Tuple[int, int, int] = (256, 256, 256),
+    blocks: Optional[Tuple[int, int, int]] = None,
     interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ):
@@ -231,8 +370,11 @@ def vp_quant_matmul_batched(
     """
     G, M, K = a.shape
     _, _, N = b.shape
-    _check_masks_batched(a_act, b_act, G, M, K, N, blocks)
     backend = substrate.resolve_backend(interpret)
+    blocks = _resolve_blocks(
+        "vp_quant_matmul_batched", (G, M, K, N),
+        (a_fxp, a_vp, b_fxp, b_vp), backend, blocks, a_act)
+    _check_masks_batched(a_act, b_act, G, M, K, N, blocks)
     if backend == "ref":
         return ref.vp_quant_matmul_batched_ref(
             a, b, a_fxp, a_vp, b_fxp, b_vp,
@@ -251,18 +393,28 @@ def block_vp_matmul(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,
     bk: int = 256,
-    blocks: Tuple[int, int, int] = (256, 256, 256),
+    blocks: Optional[Tuple[int, int, int]] = None,
     interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ):
     """Block-VP int8 matmul; index granularity = (row, k-block)."""
-    assert blocks[1] == bk, "kernel k-tile must equal index block size"
+    if blocks is not None and blocks[1] != bk:
+        # Validate on EVERY backend (the ref path is the parity oracle;
+        # a contract violation must not pass on CPU and crash on TPU).
+        raise ValueError(
+            f"kernel k-tile {blocks[1]} must equal index block size {bk}")
     backend = substrate.resolve_backend(interpret)
     if backend == "ref":
         return ref.block_vp_matmul_ref(
             a_m, a_i, b_m, b_i, a_fmt, b_fmt, bk=bk, out_dtype=out_dtype)
     M, K = a_m.shape
     _, N = b_m.shape
+    if blocks is None:
+        # The k-tile is pinned to the index block size; clamp m/n only.
+        h = autotune.heuristic_blocks(M, K, N)
+        if backend == "native":
+            h = autotune._native_floor(h)
+        blocks = (h[0], bk, h[2])
     bm, _, bn = blocks
     am = _pad2(a_m, bm, bk)
     bm_ = _pad2(b_m, bk, bn)

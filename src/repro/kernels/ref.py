@@ -3,9 +3,18 @@
 These are the ground truth the kernels are tested against
 (`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose), and the
 CPU execution path used by models / the dry-run (same math, no Pallas).
+
+The oracle entry points are `jax.jit`-compiled (formats/tiles static):
+eagerly, each quantize cascade dispatches ~10 elementwise XLA ops PER
+exponent option and materializes every intermediate — at serving batch
+sizes that is pure HBM/cache traffic, and it made the CPU engine path's
+per-element cost grow with the working set (the BENCH_pr2 OFDM S=64
+regression).  Under jit the cascades fuse into one loop; numerics are
+unchanged (same ops, no reassociation), which the parity suites pin.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -14,8 +23,10 @@ import jax.numpy as jnp
 from repro.core.formats import FXPFormat, VPFormat
 from repro.core.fxp import fxp_quantize
 from repro.core.convert import fxp2vp, vp_to_float
+from repro.core.packing import pack_vp, unpack_vp
 
 
+@functools.partial(jax.jit, static_argnames=("fxp", "vp"))
 def vp_quant_ref(x, fxp: FXPFormat, vp: VPFormat):
     """float -> (int8 significand, uint8 index) through the FXP grid."""
     raw = fxp_quantize(x, fxp)
@@ -25,9 +36,24 @@ def vp_quant_ref(x, fxp: FXPFormat, vp: VPFormat):
     return m.astype(significand_dtype(vp.M)), i.astype(jnp.uint8)
 
 
+@functools.partial(jax.jit, static_argnames=("fxp", "vp"))
+def vp_quant_packed_ref(x, fxp: FXPFormat, vp: VPFormat):
+    """float -> packed VP words (`core.packing` layout, one plane)."""
+    raw = fxp_quantize(x, fxp)
+    m, i = fxp2vp(raw, fxp, vp)
+    return pack_vp(m, i, vp)
+
+
+@functools.partial(jax.jit, static_argnames=("vp", "dtype"))
 def vp_dequant_ref(m, i, vp: VPFormat, dtype=jnp.float32):
     """(significand, index) -> real values m * 2^-f_i."""
     return vp_to_float(m, i, vp, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("vp", "dtype"))
+def vp_dequant_packed_ref(w, vp: VPFormat, dtype=jnp.float32):
+    """packed VP words -> real values (unpack + dequant oracle)."""
+    return vp_to_float(*unpack_vp(w, vp), vp, dtype)
 
 
 def tile_activity(x_abs_max, threshold: float):
@@ -56,6 +82,8 @@ def cspade_tile_masks(
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("a_fmt", "b_fmt", "tiles", "out_dtype"))
 def vp_matmul_ref(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,
@@ -88,6 +116,29 @@ def vp_matmul_ref(
     return out.transpose(0, 2, 1, 3).reshape(M, N)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("a_fmt", "b_fmt", "tiles", "out_dtype"))
+def vp_matmul_packed_ref(
+    a_w, b_w,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act: Optional[jax.Array] = None,
+    b_act: Optional[jax.Array] = None,
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.float32,
+):
+    """Packed-word matmul oracle: unpack INSIDE the jit (no eager unpack
+    round-trip), then the plane oracle — bit-identical to
+    `vp_matmul_ref(*unpack_vp(a_w), *unpack_vp(b_w))`."""
+    a_m, a_i = unpack_vp(a_w, a_fmt)
+    b_m, b_i = unpack_vp(b_w, b_fmt)
+    return vp_matmul_ref(
+        a_m, a_i, b_m, b_i, a_fmt, b_fmt,
+        a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_fxp", "a_vp", "b_fxp", "b_vp", "tiles", "out_dtype"))
 def vp_quant_matmul_ref(
     a, b,
     a_fxp: FXPFormat, a_vp: VPFormat,
@@ -133,6 +184,8 @@ def cspade_tile_masks_batched(
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("a_fmt", "b_fmt", "tiles", "out_dtype"))
 def vp_matmul_batched_ref(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,
@@ -165,6 +218,27 @@ def vp_matmul_batched_ref(
     return out.transpose(0, 1, 3, 2, 4).reshape(G, M, N)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("a_fmt", "b_fmt", "tiles", "out_dtype"))
+def vp_matmul_batched_packed_ref(
+    a_w, b_w,
+    a_fmt: VPFormat, b_fmt: VPFormat,
+    a_act: Optional[jax.Array] = None,
+    b_act: Optional[jax.Array] = None,
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.float32,
+):
+    """Batched packed-word matmul oracle (unpack fused into the jit)."""
+    a_m, a_i = unpack_vp(a_w, a_fmt)
+    b_m, b_i = unpack_vp(b_w, b_fmt)
+    return vp_matmul_batched_ref(
+        a_m, a_i, b_m, b_i, a_fmt, b_fmt,
+        a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_fxp", "a_vp", "b_fxp", "b_vp", "tiles", "out_dtype"))
 def vp_quant_matmul_batched_ref(
     a, b,
     a_fxp: FXPFormat, a_vp: VPFormat,
@@ -182,6 +256,8 @@ def vp_quant_matmul_batched_ref(
         a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("a_fmt", "b_fmt", "bk", "out_dtype"))
 def block_vp_matmul_ref(
     a_m, a_i, b_m, b_i,
     a_fmt: VPFormat, b_fmt: VPFormat,

@@ -27,6 +27,7 @@ cloning it per format.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -131,16 +132,111 @@ def scale_lut_gather(i, fmt: VPFormat, dtype):
 
 
 def dequant_cascade(m, i, fmt: VPFormat, dtype):
-    """(significand, index) -> real tile: m * 2**-f_i (paper Fig. 5)."""
-    return m.astype(dtype) * scale_lut_gather(i, fmt, dtype)
+    """(significand, index) -> real tile: m * 2**-f_i (paper Fig. 5).
+
+    The scale comes from `scale_of_index`: O(1) bit-assembly per element
+    when the format admits it, else the unrolled select cascade — both
+    produce bit-identical power-of-two scales (tests/test_packing.py).
+    """
+    return m.astype(dtype) * scale_of_index(i, fmt, dtype)
 
 
-def _quantize_core(x, fxp: FXPFormat, vp: VPFormat, dtype):
-    """Shared Fig. 3 cascade body: (int32 m, int32 i, dtype scale).
+# -- O(1) bit-assembled scale --------------------------------------------
 
-    The scale 2**-f_i is selected by the SAME `take` predicates that select
-    (m, i), so fused consumers get it for free instead of re-deriving it
-    from i with a second K-way select chain."""
+@functools.lru_cache(maxsize=None)
+def _fpack_params(fmt: VPFormat) -> Optional[Tuple[int, int, int]]:
+    """Static constants for the bit-assembled scale, or None if the format
+    doesn't admit it (exponents outside the f32 normal range, or the
+    biased f-list doesn't fit one 32-bit constant).
+
+    Returns (fpack, bits, fmin): the exponent list packed little-endian
+    into one uint32, `bits` bits per biased entry f_k - fmin.
+    """
+    fmin = min(fmt.f)
+    span = max(fmt.f) - fmin
+    # 2**-f must be an f32 NORMAL so its bit pattern is pure exponent:
+    # biased exponent 127 - f in [1, 254].
+    if not all(1 <= 127 - fv <= 254 for fv in fmt.f):
+        return None
+    for bits in (4, 8, 16):
+        if span < (1 << bits) and fmt.K * bits <= 32:
+            fpack = 0
+            for k, fv in enumerate(fmt.f):
+                fpack |= (fv - fmin) << (bits * k)
+            return fpack, bits, fmin
+    return None
+
+
+def scale_bit_assemble(i, fmt: VPFormat):
+    """scale[i] = 2**-f_i as f32 by integer exponent arithmetic — O(1).
+
+    Three steps, none of which grow with K:
+      1. f_i  = (FPACK >> (i * bits)) & mask  + fmin   (variable shift of
+         a packed static constant — the whole exponent list rides in one
+         uint32 immediate);
+      2. exponent field: (127 - f_i) << 23  (2**e is an f32 normal with a
+         zero mantissa, so its bit pattern IS the biased exponent field);
+      3. bitcast int32 -> float32.
+    Bit-identical to `scale_lut_gather` (powers of two are exact), which
+    stays as the oracle; callers must check `_fpack_params(fmt)` first
+    (use `scale_of_index` for the automatic fallback).
+    """
+    fpack, bits, fmin = _fpack_params(fmt)
+    ii = i.astype(jnp.uint32)
+    biased = jnp.bitwise_and(
+        jnp.right_shift(jnp.uint32(fpack), ii * jnp.uint32(bits)),
+        jnp.uint32((1 << bits) - 1),
+    ).astype(jnp.int32)
+    ebits = jnp.left_shift(jnp.int32(127 - fmin) - biased, 23)
+    return jax.lax.bitcast_convert_type(ebits, jnp.float32)
+
+
+def scale_of_index(i, fmt: VPFormat, dtype):
+    """2**-f_i per element: the kernel-wide scale policy.
+
+    The bit-assembly costs ~7 integer ops independent of K; the select
+    chain costs K dependent selects.  So the O(1) path engages for wide
+    exponent lists (K > 4, where the chain serializes), while paper-class
+    K <= 4 lists keep the shorter chain; both produce bit-identical
+    power-of-two scales, so this is purely a cost choice.  Falls back to
+    the chain for non-f32 dtypes and exponents outside the f32 normal
+    range (where no pure-exponent bit pattern exists).
+    """
+    if (fmt.K > 4 and dtype == jnp.float32
+            and _fpack_params(fmt) is not None):
+        return scale_bit_assemble(i, fmt)
+    return scale_lut_gather(i, fmt, dtype)
+
+
+# -- packed-word in-kernel path ------------------------------------------
+
+def unpack_cascade(w, fmt: VPFormat):
+    """Packed word tile -> (int32 significand, int32 index).
+
+    One arithmetic shift (sign extension for free) and one mask —
+    cheaper than reading a second operand plane from HBM ever was.
+    Delegates to `core.packing.unpack_vp` (pure jnp, in-kernel safe):
+    ONE implementation of the word layout, shared with the oracle.
+    """
+    from repro.core.packing import unpack_vp
+
+    return unpack_vp(w, fmt)
+
+
+def dequant_packed(w, fmt: VPFormat, dtype):
+    """Packed word tile -> real tile, unpack + bit-assembled dequant."""
+    m, i = unpack_cascade(w, fmt)
+    return m.astype(dtype) * scale_of_index(i, fmt, dtype)
+
+
+def quantize_cascade(x, fxp: FXPFormat, vp: VPFormat):
+    """float tile -> (int32 significand, int32 index) (paper Fig. 3).
+
+    The bit-window + LOD circuit as an unrolled chain of arithmetic shifts
+    and in-range tests over the static exponent list — bit-identical to the
+    circuit (see core.convert for the equivalence proof).  Callers cast the
+    planes to their storage dtypes (int8 / uint8).
+    """
     raw = jnp.clip(
         jnp.round(x * jnp.float32(2.0 ** fxp.F)),
         fxp.raw_min, fxp.raw_max,
@@ -149,7 +245,6 @@ def _quantize_core(x, fxp: FXPFormat, vp: VPFormat, dtype):
     lo, hi = vp.raw_min, vp.raw_max
     m_sel = jnp.zeros_like(raw)
     i_sel = jnp.zeros_like(raw)
-    s_sel = jnp.zeros(raw.shape, dtype)
     valid_any = jnp.zeros(raw.shape, jnp.bool_)
     for k in range(vp.K):
         s_k = fxp.F - vp.f[k]
@@ -161,7 +256,6 @@ def _quantize_core(x, fxp: FXPFormat, vp: VPFormat, dtype):
         take = valid_k & ~valid_any
         m_sel = jnp.where(take, m_k, m_sel)
         i_sel = jnp.where(take, k, i_sel)
-        s_sel = jnp.where(take, jnp.asarray(2.0 ** (-vp.f[k]), dtype), s_sel)
         valid_any = valid_any | valid_k
     # Out-of-range on every option: saturate at the coarsest exponent.
     s_last = fxp.F - vp.f[-1]
@@ -172,32 +266,31 @@ def _quantize_core(x, fxp: FXPFormat, vp: VPFormat, dtype):
     )
     m = jnp.where(valid_any, m_sel, m_last)
     i = jnp.where(valid_any, i_sel, vp.K - 1)
-    scale = jnp.where(
-        valid_any, s_sel, jnp.asarray(2.0 ** (-vp.f[-1]), dtype))
-    return m, i, scale
-
-
-def quantize_cascade(x, fxp: FXPFormat, vp: VPFormat):
-    """float tile -> (int32 significand, int32 index) (paper Fig. 3).
-
-    The bit-window + LOD circuit as an unrolled chain of arithmetic shifts
-    and in-range tests over the static exponent list — bit-identical to the
-    circuit (see core.convert for the equivalence proof).  Callers cast the
-    planes to their storage dtypes (int8 / uint8).
-    """
-    m, i, _ = _quantize_core(x, fxp, vp, jnp.float32)
     return m, i
+
+
+def quantize_pack_cascade(x, fxp: FXPFormat, vp: VPFormat):
+    """float tile -> packed VP words (int32; caller casts to storage dtype).
+
+    The Fig. 3 cascade followed by the core.packing word assembly
+    ``(m << E) | i`` — the fused producer for kernels that emit packed
+    planes straight from floats, never materializing the two-plane layout.
+    """
+    m, i = quantize_cascade(x, fxp, vp)
+    return jnp.bitwise_or(jnp.left_shift(m, vp.E), i)
 
 
 def quantize_dequant_cascade(x, fxp: FXPFormat, vp: VPFormat, dtype):
     """float tile -> VP-rounded reals m * 2**-f_i in ONE cascade.
 
     For fused kernels: equals `dequant_cascade(*quantize_cascade(x))` bit
-    for bit, but the scale rides along with the (m, i) selection instead of
-    being re-derived from i by a second K-way select chain.
+    for bit.  The scale is re-derived from the selected index by the O(1)
+    bit-assembly (`scale_of_index`) instead of riding a third K-way select
+    chain alongside (m, i) — same exact power-of-two values, fewer VPU
+    selects per element.
     """
-    m, _, scale = _quantize_core(x, fxp, vp, dtype)
-    return m.astype(dtype) * scale
+    m, i = quantize_cascade(x, fxp, vp)
+    return m.astype(dtype) * scale_of_index(i, fmt=vp, dtype=dtype)
 
 
 def accum_init(acc_ref, ki):

@@ -36,9 +36,10 @@ def _block_vp_matmul_kernel(
         a_m_ref[...], b_m_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
-    # Factorized scales: one per A row, one per B col (this k-tile).
-    sa = sub.scale_lut_gather(a_i_ref[...], a_fmt, jnp.float32)  # (bm, 1)
-    sb = sub.scale_lut_gather(b_i_ref[...], b_fmt, jnp.float32)  # (1, bn)
+    # Factorized scales: one per A row, one per B col (this k-tile) —
+    # bit-assembled in O(1) per element (select-chain fallback inside).
+    sa = sub.scale_of_index(a_i_ref[...], a_fmt, jnp.float32)  # (bm, 1)
+    sb = sub.scale_of_index(b_i_ref[...], b_fmt, jnp.float32)  # (1, bn)
     acc_ref[...] += acc_i32.astype(jnp.float32) * sa * sb
 
     sub.accum_flush(o_ref, acc_ref, ki, nk)

@@ -22,6 +22,10 @@ def _vp_dequant_kernel(m_ref, i_ref, o_ref, *, vp: VPFormat, dtype):
     o_ref[...] = sub.dequant_cascade(m_ref[...], i_ref[...], vp, dtype)
 
 
+def _vp_dequant_packed_kernel(w_ref, o_ref, *, vp: VPFormat, dtype):
+    o_ref[...] = sub.dequant_packed(w_ref[...], vp, dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("vp", "dtype", "interpret", "block"))
 def vp_dequant_pallas(
@@ -41,3 +45,29 @@ def vp_dequant_pallas(
         out_shape=jax.ShapeDtypeStruct((R, C), dtype),
         interpret=interpret,
     )(m, i)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("vp", "dtype", "interpret", "block"))
+def vp_dequant_packed_pallas(
+    w, vp: VPFormat,
+    dtype=jnp.float32,
+    interpret: bool = False,
+    block=(BLOCK_R, BLOCK_C),
+):
+    """Dequantize PACKED VP words: one HBM plane in, reals out.
+
+    Unpack is two integer ops (shift + mask) and the scale is the O(1)
+    bit-assembly — no second plane read and no K-way select chain.
+    """
+    R, C = w.shape
+    br, bc = block
+    spec = pl.BlockSpec((br, bc), lambda r, c: (r, c))
+    return sub.vp_pallas_call(
+        functools.partial(_vp_dequant_packed_kernel, vp=vp, dtype=dtype),
+        grid=(pl.cdiv(R, br), pl.cdiv(C, bc)),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
+        interpret=interpret,
+    )(w)

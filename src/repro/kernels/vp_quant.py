@@ -30,6 +30,11 @@ def _vp_quant_kernel(x_ref, m_ref, i_ref, *, fxp: FXPFormat, vp: VPFormat):
     i_ref[...] = i.astype(jnp.uint8)
 
 
+def _vp_quant_packed_kernel(x_ref, w_ref, *, fxp: FXPFormat, vp: VPFormat):
+    w = sub.quantize_pack_cascade(x_ref[...], fxp, vp)
+    w_ref[...] = w.astype(w_ref.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("fxp", "vp", "interpret", "block"))
 def vp_quant_pallas(
@@ -53,3 +58,31 @@ def vp_quant_pallas(
         interpret=interpret,
     )(x)
     return m, i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fxp", "vp", "interpret", "block"))
+def vp_quant_packed_pallas(
+    x, fxp: FXPFormat, vp: VPFormat,
+    interpret: bool = False,
+    block=(BLOCK_R, BLOCK_C),
+):
+    """Quantize a 2D f32 array straight to PACKED VP words (one plane).
+
+    The Fig. 3 cascade plus the `(m << E) | i` word assembly fused into
+    one kernel — the packed planes are born packed; the two-plane layout
+    never exists, in HBM or anywhere else.
+    """
+    from repro.core.packing import storage_dtype
+
+    R, C = x.shape
+    br, bc = block
+    spec = pl.BlockSpec((br, bc), lambda r, c: (r, c))
+    return sub.vp_pallas_call(
+        functools.partial(_vp_quant_packed_kernel, fxp=fxp, vp=vp),
+        grid=(pl.cdiv(R, br), pl.cdiv(C, bc)),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), storage_dtype(vp)),
+        interpret=interpret,
+    )(x)

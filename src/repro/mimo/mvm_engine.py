@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FXPFormat, VPFormat
-from repro.kernels import ops, ref, substrate
+from repro.kernels import autotune, ops, ref, substrate
 from .equalizer import EqualizerSpec
 
 
@@ -60,12 +60,29 @@ def _vp_planes(x, gain, fxp: FXPFormat, vp: VPFormat, interpret):
     return ops.vp_quant(x * gain, fxp, vp, interpret=interpret)
 
 
-def _div_tile(sz: int, target: int = 256) -> int:
-    """Largest divisor of `sz` that is <= target (kernel tile picker)."""
+def _decision_tiles(blocks, M: int, K: int, N: int):
+    """Tiles used for the fused-vs-unfused decision: the caller's explicit
+    blocks, else the autotuner's shape-clamped heuristic (which is also
+    what ops.py resolves to absent a tuned cache entry)."""
+    return blocks if blocks is not None else autotune.heuristic_blocks(M, K, N)
+
+
+def _div_tile(sz: int, target: int) -> int:
+    """Largest divisor of `sz` that is <= target."""
     t = min(target, sz)
     while sz % t:
         t -= 1
     return t
+
+
+def _mask_tiles(blocks, M: int, K: int, N: int):
+    """Tile grid for the CSPADE paths: explicit blocks win; otherwise the
+    heuristic snapped DOWN to exact divisors of the operand shape (mask
+    construction reshapes on the grid, so tiles must divide exactly)."""
+    if blocks is not None:
+        return tuple(blocks)
+    h = autotune.heuristic_blocks(M, K, N)
+    return (_div_tile(M, h[0]), _div_tile(K, h[1]), _div_tile(N, h[2]))
 
 
 def _pick_fused(fused: Optional[bool], cspade_q, nm: int, nn: int,
@@ -84,6 +101,7 @@ def _rpad(g, ndim: int):
     return g.reshape(g.shape + (1,) * (ndim - g.ndim))
 
 
+@jax.jit
 def stack_complex_operands(w, y, w_gain=1.0, y_gain=1.0):
     """Pack a complex MVM batch into the 4-RM batched-kernel operands.
 
@@ -94,7 +112,8 @@ def stack_complex_operands(w, y, w_gain=1.0, y_gain=1.0):
     products).  Returns a (..., 2U, B) = [W_re; W_im] rows and
     b (..., B, 2) = [y_re, y_im] columns — the single source of truth
     for the packing shared by the narrowband engine and the wideband
-    OFDM path.
+    OFDM path.  Jitted: eagerly this is ~10 dispatched ops per call on
+    the serving hot path; fused it is one.
     """
     wg = _rpad(w_gain, w.ndim)
     yg = _rpad(y_gain, y.ndim)
@@ -107,6 +126,7 @@ def stack_complex_operands(w, y, w_gain=1.0, y_gain=1.0):
     return a, b
 
 
+@jax.jit
 def combine_products(out, gain=1.0):
     """(..., 2U, 2) raw 4-RM products -> complex (..., U) estimates.
 
@@ -128,6 +148,7 @@ def batched_complex_mvm(
     cspade_threshold_quantile: Optional[float] = None,
     interpret: Optional[bool] = None,
     fused: Optional[bool] = None,
+    blocks: Optional[tuple] = None,
 ) -> jax.Array:
     """All four real products of G complex MVMs in ONE batched kernel call.
 
@@ -138,12 +159,16 @@ def batched_complex_mvm(
     This is the entry point the wideband OFDM path folds subcarriers into
     (mimo/ofdm.py): anything expressible as a batch of complex MVMs rides
     the same leading batch grid dimension.
+
+    `blocks=None` defers the tile choice to the autotuner (ops.py resolves
+    a tuned cache entry, else the shape-clamped heuristic).  The mask-free
+    unfused path quantizes to PACKED VP words — one HBM plane per operand.
     """
     G, M, K = a.shape
     N = b.shape[-1]
-    tiles = (_div_tile(M), _div_tile(K), _div_tile(N))
+    dt = _decision_tiles(blocks, M, K, N)
     fused = _pick_fused(fused, cspade_threshold_quantile,
-                        -(-M // tiles[0]), -(-N // tiles[2]), interpret)
+                        -(-M // dt[0]), -(-N // dt[2]), interpret)
 
     if fused:
         if cspade_threshold_quantile is not None:
@@ -151,20 +176,30 @@ def batched_complex_mvm(
                 "fused path has no materialized planes to calibrate masks on")
         return ops.vp_quant_matmul_batched(
             a, b, fxp_w, vp_w, fxp_y, vp_y,
-            blocks=tiles, interpret=interpret)
+            blocks=blocks, interpret=interpret)
 
+    if cspade_threshold_quantile is None:
+        # Packed words: half the quantized-operand HBM traffic, outputs
+        # bit-identical to the two-plane path (tests/test_packing.py).
+        a_w = ops.vp_quant(a, fxp_w, vp_w, interpret=interpret, packed=True)
+        b_w = ops.vp_quant(b, fxp_y, vp_y, interpret=interpret, packed=True)
+        return ops.vp_matmul_batched(
+            a_w, None, b_w, None, vp_w, vp_y,
+            blocks=blocks, interpret=interpret)
+
+    # CSPADE calibration needs materialized (m, i) planes, and the masks
+    # pin the tile grid — resolve it here and pass it down explicitly.
+    tiles = _mask_tiles(blocks, M, K, N)
     a_m, a_i = ops.vp_quant(a, fxp_w, vp_w, interpret=interpret)
     b_m, b_i = ops.vp_quant(b, fxp_y, vp_y, interpret=interpret)
 
-    a_act = b_act = None
-    if cspade_threshold_quantile is not None:
-        q = cspade_threshold_quantile
-        ta = jnp.quantile(jnp.abs(a), q)
-        tb = jnp.quantile(jnp.abs(b), q)
-        a_deq = ref.vp_dequant_ref(a_m, a_i, vp_w)
-        b_deq = ref.vp_dequant_ref(b_m, b_i, vp_y)
-        a_act, b_act = ref.cspade_tile_masks_batched(
-            a_deq, b_deq, *tiles, ta, tb)
+    q = cspade_threshold_quantile
+    ta = jnp.quantile(jnp.abs(a), q)
+    tb = jnp.quantile(jnp.abs(b), q)
+    a_deq = ref.vp_dequant_ref(a_m, a_i, vp_w)
+    b_deq = ref.vp_dequant_ref(b_m, b_i, vp_y)
+    a_act, b_act = ref.cspade_tile_masks_batched(
+        a_deq, b_deq, *tiles, ta, tb)
 
     return ops.vp_matmul_batched(
         a_m, a_i, b_m, b_i, vp_w, vp_y,
@@ -173,17 +208,19 @@ def batched_complex_mvm(
 
 def _equalize_batched(
     spec: EqualizerSpec, w, y, cspade_threshold_quantile, interpret, fused,
+    blocks=None,
 ):
     a, b = stack_complex_operands(w, y, spec.w_gain, spec.y_gain)
     out = batched_complex_mvm(
         a, b, spec.w_fxp, spec.w_vp, spec.y_fxp, spec.y_vp,
         cspade_threshold_quantile=cspade_threshold_quantile,
-        interpret=interpret, fused=fused)
+        interpret=interpret, fused=fused, blocks=blocks)
     return combine_products(out, spec.w_gain * spec.y_gain)   # (n, U)
 
 
 def _equalize_masked(
     spec: EqualizerSpec, w, y, cspade_threshold_quantile, interpret, fused,
+    blocks=None,
 ):
     """Legacy masked-diagonal path (the PR-1 engine), kept as the parity
     oracle for the batched grid: fold realizations into the row axis, run
@@ -199,9 +236,9 @@ def _equalize_masked(
 
     M, K = wr.shape
     N = yr.shape[1]
-    tiles = (_div_tile(M), _div_tile(K), _div_tile(N))
+    dt = _decision_tiles(blocks, M, K, N)
     fused = _pick_fused(fused, cspade_threshold_quantile,
-                        -(-M // tiles[0]), -(-N // tiles[2]), interpret)
+                        -(-M // dt[0]), -(-N // dt[2]), interpret)
 
     if fused:
         if cspade_threshold_quantile is not None:
@@ -211,7 +248,7 @@ def _equalize_masked(
         def mmf(a_f, b_f):
             return ops.vp_quant_matmul(
                 a_f, b_f, fxp_w, vp_w, fxp_y, vp_y,
-                blocks=tiles, interpret=interpret)
+                blocks=blocks, interpret=interpret)
 
         wrg, wig = wr * spec.w_gain, wi * spec.w_gain
         yrg, yig = yr * spec.y_gain, yi * spec.y_gain
@@ -219,20 +256,38 @@ def _equalize_masked(
         ii = mmf(wig, yig)
         ri = mmf(wrg, yig)
         ir = mmf(wig, yrg)
+    elif cspade_threshold_quantile is None:
+        # Mask-free unfused: packed word planes (one HBM plane each).
+        def _packed(x, gain, fxp, vp):
+            return ops.vp_quant(
+                x * gain, fxp, vp, interpret=interpret, packed=True)
+
+        wr_w = _packed(wr, spec.w_gain, fxp_w, vp_w)
+        wi_w = _packed(wi, spec.w_gain, fxp_w, vp_w)
+        yr_w = _packed(yr, spec.y_gain, fxp_y, vp_y)
+        yi_w = _packed(yi, spec.y_gain, fxp_y, vp_y)
+
+        def mmp(aw, bw):
+            return ops.vp_matmul(aw, None, bw, None, vp_w, vp_y,
+                                 blocks=blocks, interpret=interpret)
+
+        rr = mmp(wr_w, yr_w)    # (nU, n)
+        ii = mmp(wi_w, yi_w)
+        ri = mmp(wr_w, yi_w)
+        ir = mmp(wi_w, yr_w)
     else:
+        tiles = _mask_tiles(blocks, M, K, N)
         wr_m, wr_i = _vp_planes(wr, spec.w_gain, fxp_w, vp_w, interpret)
         wi_m, wi_i = _vp_planes(wi, spec.w_gain, fxp_w, vp_w, interpret)
         yr_m, yr_i = _vp_planes(yr, spec.y_gain, fxp_y, vp_y, interpret)
         yi_m, yi_i = _vp_planes(yi, spec.y_gain, fxp_y, vp_y, interpret)
 
-        a_act = b_act = None
-        if cspade_threshold_quantile is not None:
-            q = cspade_threshold_quantile
-            ta = jnp.quantile(jnp.abs(wr) * spec.w_gain, q)
-            tb = jnp.quantile(jnp.abs(yr) * spec.y_gain, q)
-            Wd = ref.vp_dequant_ref(wr_m, wr_i, vp_w) * spec.w_gain
-            Yd = ref.vp_dequant_ref(yr_m, yr_i, vp_y) * spec.y_gain
-            a_act, b_act = ref.cspade_tile_masks(Wd, Yd, *tiles, ta, tb)
+        q = cspade_threshold_quantile
+        ta = jnp.quantile(jnp.abs(wr) * spec.w_gain, q)
+        tb = jnp.quantile(jnp.abs(yr) * spec.y_gain, q)
+        Wd = ref.vp_dequant_ref(wr_m, wr_i, vp_w) * spec.w_gain
+        Yd = ref.vp_dequant_ref(yr_m, yr_i, vp_y) * spec.y_gain
+        a_act, b_act = ref.cspade_tile_masks(Wd, Yd, *tiles, ta, tb)
 
         def mm(am, ai, bm_, bi):
             return ops.vp_matmul(am, ai, bm_, bi, vp_w, vp_y,
@@ -261,6 +316,7 @@ def equalize_vp_kernel(
     interpret: Optional[bool] = None,
     fused: Optional[bool] = None,
     mode: str = "batched",
+    blocks: Optional[tuple] = None,
 ) -> jax.Array:
     """s_hat (n, U) complex through the VP kernel path.
 
@@ -271,14 +327,15 @@ def equalize_vp_kernel(
     modes (batched does 1/n of the work); with
     `cspade_threshold_quantile` set, each mode mutes on its own tile
     geometry and the outputs may differ within the muting perturbation.
+    `blocks=None` defers tiling to the autotuner (see kernels.autotune).
     """
     assert spec.is_vp
     if mode == "batched":
         return _equalize_batched(
-            spec, w, y, cspade_threshold_quantile, interpret, fused)
+            spec, w, y, cspade_threshold_quantile, interpret, fused, blocks)
     if mode == "masked":
         return _equalize_masked(
-            spec, w, y, cspade_threshold_quantile, interpret, fused)
+            spec, w, y, cspade_threshold_quantile, interpret, fused, blocks)
     raise ValueError(f"unknown mode {mode!r} (want 'batched' or 'masked')")
 
 

@@ -212,6 +212,7 @@ def equalize_wideband(
     interpret: Optional[bool] = None,
     fused: Optional[bool] = None,
     mesh=None,
+    blocks: Optional[Tuple[int, int, int]] = None,
 ) -> jax.Array:
     """s_hat (S, n, U) through the batched VP kernel, whole band at once.
 
@@ -227,6 +228,11 @@ def equalize_wideband(
     how="shard_map": shard the subcarrier axis over `mesh`'s "sc" axis
         via `parallel.sharding.shard_over_subcarriers`, each device
         running the flat path on its slab (requires S % mesh size == 0).
+
+    `blocks=None` defers the kernel tiling to `kernels.autotune`
+    (persisted tuned entry when one exists, else the shape-clamped
+    heuristic — the MVM tile never pads beyond the (2U, B) x (B, 2)
+    operands).
     """
     S, n, U, B = w.shape
     if len(specs) != S:
@@ -246,7 +252,8 @@ def equalize_wideband(
         S_f = a_f.shape[0]
         out = batched_complex_mvm(
             a_f.reshape(S_f * n, 2 * U, B), b_f.reshape(S_f * n, B, 2),
-            fxp_w, vp_w, fxp_y, vp_y, interpret=interpret, fused=fused)
+            fxp_w, vp_w, fxp_y, vp_y, interpret=interpret, fused=fused,
+            blocks=blocks)
         return out.reshape(S_f, n, 2 * U, 2)
 
     if how == "flat":
@@ -255,7 +262,7 @@ def equalize_wideband(
         out = jax.vmap(
             lambda a_s, b_s: batched_complex_mvm(
                 a_s, b_s, fxp_w, vp_w, fxp_y, vp_y,
-                interpret=interpret, fused=fused))(a, b)
+                interpret=interpret, fused=fused, blocks=blocks))(a, b)
     elif how == "shard_map":
         from repro.parallel.sharding import shard_over_subcarriers
         out = shard_over_subcarriers(_flat, mesh=mesh, n_subcarriers=S)(a, b)

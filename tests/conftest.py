@@ -14,6 +14,8 @@ import importlib.util
 import os
 import sys
 
+import pytest
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:
@@ -24,3 +26,23 @@ except ImportError:
     _mh = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mh)
     _mh.install(sys.modules)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_autotune_cache(tmp_path_factory):
+    """Point the autotune cache at a per-run temp file for ALL tests.
+
+    Without this, tests resolving `blocks=None` would read whatever a
+    prior benchmark run persisted to the developer's global cache
+    (~/.cache/repro-vp/autotune.json) — kernel tilings, and thus the
+    exact configurations under test, would depend on machine state.
+    (tests/test_autotune.py re-points it per-test via monkeypatch.)
+    """
+    old = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    path = str(tmp_path_factory.mktemp("autotune") / "autotune.json")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = path
+    yield
+    if old is None:
+        os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+    else:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = old

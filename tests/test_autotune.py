@@ -1,0 +1,202 @@
+"""Autotuner: heuristic clamping, cache persistence, resolution order.
+
+The autotuner must (a) never tile beyond the padded operand shape — the
+small-shape padding fix for the MVM engine's (2U, B) x (B, 2) products —
+(b) persist measured winners across processes via the JSON cache, and
+(c) resolve explicit blocks > cached entry > heuristic, in that order.
+"""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FXPFormat, VPFormat
+from repro.kernels import autotune, ops
+
+W_FXP, W_VP = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+Y_FXP, Y_VP = FXPFormat(9, 1), VPFormat(7, (1, -1))
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the autotune cache at a fresh per-test file."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    # Drop any in-memory layer for this path across tests.
+    autotune._caches.pop(path, None)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Heuristic: shape-clamped defaults
+# ---------------------------------------------------------------------------
+
+def test_heuristic_clamps_to_padded_shape():
+    # The MVM engine shape: one snug tile per axis, not 256^3.
+    assert autotune.heuristic_blocks(16, 64, 2) == (16, 64, 2)
+    # Ragged dims round up to the next power of two, never past the base.
+    assert autotune.heuristic_blocks(13, 50, 3) == (16, 64, 4)
+    # Large dims keep the standard base tile.
+    assert autotune.heuristic_blocks(512, 512, 512) == (256, 256, 256)
+    assert autotune.heuristic_blocks(512, 512, 512, base=(512,) * 3) \
+        == (512, 512, 512)
+    # A block never exceeds its padded dimension.
+    for dims in [(1, 1, 1), (7, 300, 2), (256, 31, 1000)]:
+        b = autotune.heuristic_blocks(*dims)
+        for blk, d in zip(b, dims):
+            assert blk <= max(256, 1 << (d - 1).bit_length())
+            assert blk >= min(d, 1)
+
+
+def test_ops_default_blocks_small_shapes(tmp_cache):
+    """ops with blocks=None run small operands without 256^3 padding and
+    match the explicitly-clamped call bit for bit."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_t(2, (16, 64)).clip(-8, 8) * 0.01,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_t(2, (64, 2)).clip(-8, 8), jnp.float32)
+    got = ops.vp_quant_matmul(
+        a, b, W_FXP, W_VP, Y_FXP, Y_VP, interpret=True)
+    want = ops.vp_quant_matmul(
+        a, b, W_FXP, W_VP, Y_FXP, Y_VP, blocks=(16, 64, 2), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Cache: persistence, round-trip, resolution order
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip_on_disk(tmp_cache):
+    key = autotune.make_key(
+        "vp_matmul", (128, 128, 128), (W_VP, Y_VP), "interpret")
+    assert autotune.get_cached(key) is None
+    autotune.record(key, (64, 128, 32))
+    # The file exists and parses back to the same entry...
+    with open(tmp_cache) as f:
+        on_disk = json.load(f)
+    assert on_disk[key] == [64, 128, 32]
+    # ... and a COLD in-memory layer (fresh process analogue) re-reads it.
+    autotune._caches.pop(tmp_cache, None)
+    assert autotune.get_cached(key) == (64, 128, 32)
+
+
+def test_resolution_order(tmp_cache):
+    shape, fmts = (128, 128, 128), (W_VP, Y_VP)
+    key = autotune.make_key("vp_matmul", shape, fmts, "interpret")
+    # No cache: heuristic.
+    assert autotune.resolve_blocks("vp_matmul", shape, fmts, "interpret") \
+        == autotune.heuristic_blocks(*shape)
+    # Cached entry wins over the heuristic.
+    autotune.record(key, (32, 32, 32))
+    assert autotune.resolve_blocks("vp_matmul", shape, fmts, "interpret") \
+        == (32, 32, 32)
+    # Explicit blocks win over everything.
+    assert autotune.resolve_blocks(
+        "vp_matmul", shape, fmts, "interpret", blocks=(8, 8, 8)) == (8, 8, 8)
+    # Different backend/formats/shape = different key = no hit.
+    assert autotune.resolve_blocks("vp_matmul", shape, fmts, "native") \
+        == autotune.heuristic_blocks(*shape)
+
+
+def test_corrupt_cache_starts_empty(tmp_cache):
+    with open(tmp_cache, "w") as f:
+        f.write("{not json")
+    autotune._caches.pop(tmp_cache, None)
+    assert autotune.get_cached("anything") is None
+    # Recording over a corrupt file repairs it.
+    autotune.record("k", (1, 2, 3))
+    autotune._caches.pop(tmp_cache, None)
+    assert autotune.get_cached("k") == (1, 2, 3)
+
+
+def test_clear_cache(tmp_cache):
+    autotune.record("k", (1, 2, 3))
+    assert os.path.exists(tmp_cache)
+    autotune.clear_cache()
+    assert not os.path.exists(tmp_cache)
+    assert autotune.get_cached("k") is None
+
+
+def test_tune_measures_and_persists(tmp_cache):
+    """tune() picks the fastest candidate and persists it for resolve."""
+    import time
+
+    calls = []
+
+    def bench(blocks):
+        calls.append(blocks)
+        time.sleep(0.02 if blocks != (16, 64, 2) else 0.0)
+
+    shape, fmts = (16, 64, 2), (W_VP, Y_VP)
+    best = autotune.tune(
+        "vp_matmul", shape, fmts, "interpret", bench,
+        candidates=[(8, 8, 2), (16, 64, 2), (16, 16, 2)], repeats=2)
+    assert best == (16, 64, 2)
+    assert set(calls) == {(8, 8, 2), (16, 64, 2), (16, 16, 2)}
+    # Resolution now hits the tuned entry, including after a cold reload.
+    autotune._caches.pop(tmp_cache, None)
+    assert autotune.resolve_blocks(
+        "vp_matmul", shape, fmts, "interpret") == (16, 64, 2)
+    # A second tune() is a pure cache hit: no more bench calls.
+    n = len(calls)
+    assert autotune.tune(
+        "vp_matmul", shape, fmts, "interpret", bench) == (16, 64, 2)
+    assert len(calls) == n
+
+
+def test_tune_survives_failing_candidate(tmp_cache):
+    def bench(blocks):
+        if blocks == (8, 8, 8):
+            raise RuntimeError("does not lower")
+
+    best = autotune.tune(
+        "vp_matmul", (32, 32, 32), (W_VP,), "interpret", bench,
+        candidates=[(8, 8, 8), (32, 32, 32)], repeats=1)
+    assert best == (32, 32, 32)
+
+
+def test_tune_raises_when_all_candidates_fail(tmp_cache):
+    """A broken bench_fn must fail LOUDLY, not persist a fake winner."""
+    def bench(blocks):
+        raise ValueError("mask grid mismatch")
+
+    with pytest.raises(RuntimeError, match="all 2 candidates failed"):
+        autotune.tune(
+            "vp_matmul", (32, 32, 32), (W_VP,), "interpret", bench,
+            candidates=[(8, 8, 8), (32, 32, 32)], repeats=1)
+    # ... and nothing was recorded for the key.
+    key = autotune.make_key("vp_matmul", (32, 32, 32), (W_VP,), "interpret")
+    assert autotune.get_cached(key) is None
+
+
+def test_native_backend_floors_to_mosaic_min_tile(tmp_cache):
+    """TPU-native heuristic tiles never go below the (8, 128) f32 min
+    tile; interpret/ref keep the snug shape clamp."""
+    shape, fmts = (16, 64, 2), (W_VP, Y_VP)
+    assert autotune.resolve_blocks("vp_matmul", shape, fmts, "interpret") \
+        == (16, 64, 2)
+    assert autotune.resolve_blocks("vp_matmul", shape, fmts, "native") \
+        == (16, 128, 128)
+    # Explicit blocks and cached (measured-on-native) entries pass as-is.
+    assert autotune.resolve_blocks(
+        "vp_matmul", shape, fmts, "native", blocks=(16, 64, 2)) \
+        == (16, 64, 2)
+
+
+def test_record_merges_with_concurrent_writer(tmp_cache):
+    """A stale in-memory snapshot must not erase a peer's entries."""
+    autotune.record("k1", (1, 1, 1))          # our process writes k1
+    # A "peer process" writes k2 directly to disk behind our back.
+    with open(tmp_cache) as f:
+        data = json.load(f)
+    data["k2"] = [2, 2, 2]
+    with open(tmp_cache, "w") as f:
+        json.dump(data, f)
+    # Our stale snapshot records k3 — k2 must survive the write.
+    autotune.record("k3", (3, 3, 3))
+    autotune._caches.pop(tmp_cache, None)
+    assert autotune.get_cached("k1") == (1, 1, 1)
+    assert autotune.get_cached("k2") == (2, 2, 2)
+    assert autotune.get_cached("k3") == (3, 3, 3)

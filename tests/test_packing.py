@@ -1,0 +1,257 @@
+"""Packed VP words: round-trip exactness and packed-vs-plane bit-identity.
+
+The packed layout (core.packing: sign+significand+index in one int8/int16
+word) is a pure storage optimization — every consumer must produce EXACTLY
+the bits the two-plane layout produces.  This file pins that:
+
+  * property tests: pack -> unpack round-trips exactly over RANDOM
+    VPFormats and random in-range (m, i) planes; `storage_bits` matches
+    the packed dtype;
+  * the O(1) bit-assembled scale (`substrate.scale_bit_assemble`) is
+    bit-identical to the K-way select-chain oracle (`scale_lut_gather`)
+    — powers of two are exact in f32, so there is NO tolerance;
+  * kernel outputs on packed operands are bit-identical to the two-plane
+    path across ref x interpret backends, fused x unfused composition,
+    batched x unbatched, including ragged (padded) shapes.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FXPFormat, VPFormat, pack_vp, unpack_vp, storage_dtype,
+)
+from repro.kernels import ops, ref, substrate as sub
+
+W_FXP, W_VP = FXPFormat(12, 11), VPFormat(7, (11, 9, 7, 6))
+Y_FXP, Y_VP = FXPFormat(9, 1), VPFormat(7, (1, -1))
+
+
+@st.composite
+def vp_formats(draw):
+    """Random VPFormat: M in [2, 12], K in {1, 2, 4, 8}, f descending."""
+    M = draw(st.integers(2, 12))
+    E = draw(st.integers(0, 3))
+    K = 1 << E
+    top = draw(st.integers(-4, 14))
+    # Distinct descending entries starting at `top`.
+    gaps = draw(st.lists(st.integers(1, 3), min_size=K - 1, max_size=K - 1))
+    f = [top]
+    for g in gaps:
+        f.append(f[-1] - g)
+    return VPFormat(M, tuple(f))
+
+
+def _random_planes(fmt, seed, shape=(17, 23)):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(fmt.raw_min, fmt.raw_max + 1, shape)
+    i = rng.integers(0, fmt.K, shape)
+    return jnp.asarray(m, jnp.int32), jnp.asarray(i, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: round trip + storage accounting + scale identity
+# ---------------------------------------------------------------------------
+
+@given(fmt=vp_formats(), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip_exact(fmt, seed):
+    m, i = _random_planes(fmt, seed)
+    w = pack_vp(m, i, fmt)
+    assert w.dtype == storage_dtype(fmt)
+    m2, i2 = unpack_vp(w, fmt)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i))
+
+
+@given(fmt=vp_formats(), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_unpack_cascade_matches_oracle(fmt, seed):
+    """The in-kernel shift/mask unpack == the pure-jnp packing oracle."""
+    m, i = _random_planes(fmt, seed)
+    w = pack_vp(m, i, fmt)
+    mk, ik = sub.unpack_cascade(w, fmt)
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(m))
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(i))
+
+
+@given(fmt=vp_formats(), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_bit_assembled_scale_bit_identical(fmt, seed):
+    """O(1) bit-assembly == K-way select chain, bit for bit."""
+    _, i = _random_planes(fmt, seed)
+    want = np.asarray(sub.scale_lut_gather(i, fmt, jnp.float32))
+    got = np.asarray(sub.scale_of_index(i, fmt, jnp.float32))
+    np.testing.assert_array_equal(got, want)
+    if sub._fpack_params(fmt) is not None:
+        # When the fast path is admissible, test it EXPLICITLY too (on
+        # wide-span K=8 lists scale_of_index may have fallen back).
+        np.testing.assert_array_equal(
+            np.asarray(sub.scale_bit_assemble(i, fmt)), want)
+
+
+@given(fmt=vp_formats())
+@settings(max_examples=40, deadline=None)
+def test_storage_bits_accounting(fmt):
+    bits = fmt.M + fmt.E
+    assert fmt.storage_bits == (8 if bits <= 8 else 16 if bits <= 16 else 32)
+    assert fmt.storage_bits >= bits
+    # The packed word always beats or matches the two-plane layout's 16.
+    if bits <= 8:
+        assert fmt.storage_bits == 8 < 16
+
+
+def test_paper_formats_storage():
+    """Table-I formats: y packs to ONE byte (halved), W to two.
+
+    Both ADMIT the O(1) bit-assembled scale, but at K <= 4 the kernel
+    policy (`scale_of_index`) keeps the shorter select chain — the
+    bit-assembly engages for K > 4 (covered by the K=8 kernel test
+    below)."""
+    assert Y_VP.storage_bits == 8
+    assert storage_dtype(Y_VP) == jnp.int8
+    assert W_VP.storage_bits == 16
+    assert storage_dtype(W_VP) == jnp.int16
+    assert sub._fpack_params(Y_VP) is not None
+    assert sub._fpack_params(W_VP) is not None
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+def test_k8_format_engages_bit_assembly_in_kernels(interpret):
+    """A K=8 format runs the O(1) bit-assembled scale INSIDE the packed
+    kernels (scale_of_index engages it for K > 4) and must still match
+    the two-plane path bit for bit."""
+    fmt8 = VPFormat(6, (8, 7, 6, 5, 4, 3, 2, 1))
+    assert sub._fpack_params(fmt8) is not None and fmt8.K > 4
+    rng = np.random.default_rng(3)
+    a_m = jnp.asarray(
+        rng.integers(fmt8.raw_min, fmt8.raw_max + 1, (24, 32)), jnp.int32)
+    a_i = jnp.asarray(rng.integers(0, fmt8.K, (24, 32)), jnp.int32)
+    b_m = jnp.asarray(
+        rng.integers(Y_VP.raw_min, Y_VP.raw_max + 1, (32, 8)), jnp.int32)
+    b_i = jnp.asarray(rng.integers(0, Y_VP.K, (32, 8)), jnp.int32)
+    plane = ops.vp_matmul(a_m, a_i, b_m, b_i, fmt8, Y_VP,
+                          interpret=interpret)
+    packed = ops.vp_matmul(
+        pack_vp(a_m, a_i, fmt8), None, pack_vp(b_m, b_i, Y_VP), None,
+        fmt8, Y_VP, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(plane))
+    deq = ops.vp_dequant(pack_vp(a_m, a_i, fmt8), None, fmt8,
+                         interpret=interpret)
+    np.testing.assert_array_equal(
+        np.asarray(deq),
+        np.asarray(ops.vp_dequant(a_m, a_i, fmt8, interpret=interpret)))
+
+
+# ---------------------------------------------------------------------------
+# Packed-vs-plane kernel bit-identity (ref x interpret, ragged shapes)
+# ---------------------------------------------------------------------------
+
+def _float_operands(M, K, N, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_t(2, (M, K)).clip(-8, 8) * 0.01, jnp.float32)
+    b = jnp.asarray(rng.standard_t(2, (K, N)).clip(-8, 8), jnp.float32)
+    return a, b
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+@pytest.mark.parametrize("mkn", [(64, 64, 64), (13, 50, 3)])
+def test_quant_packed_equals_packed_planes(mkn, interpret):
+    a, _ = _float_operands(*mkn)
+    m, i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    w = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret, packed=True)
+    assert w.dtype == storage_dtype(W_VP)
+    np.testing.assert_array_equal(
+        np.asarray(w), np.asarray(pack_vp(m, i, W_VP)))
+
+
+def test_dequant_misuse_raises_clearly():
+    """vp_dequant(w, fmt) — format in the index slot — must fail loudly."""
+    w = jnp.zeros((4, 4), jnp.int16)
+    with pytest.raises(TypeError, match="THIRD argument"):
+        ops.vp_dequant(w, W_VP)
+    with pytest.raises(TypeError, match="THIRD argument"):
+        ops.vp_dequant(w, None, None)
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+@pytest.mark.parametrize("mkn", [(64, 64, 64), (13, 50, 3)])
+def test_dequant_packed_bit_identical(mkn, interpret):
+    a, _ = _float_operands(*mkn)
+    m, i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    w = pack_vp(m, i, W_VP)
+    d_plane = ops.vp_dequant(m, i, W_VP, interpret=interpret)
+    d_packed = ops.vp_dequant(w, None, W_VP, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(d_packed), np.asarray(d_plane))
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+@pytest.mark.parametrize("mkn", [(64, 64, 64), (13, 50, 3)])
+def test_matmul_packed_bit_identical(mkn, interpret):
+    a, b = _float_operands(*mkn)
+    a_m, a_i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    b_m, b_i = ops.vp_quant(b, Y_FXP, Y_VP, interpret=interpret)
+    a_w = pack_vp(a_m, a_i, W_VP)
+    b_w = pack_vp(b_m, b_i, Y_VP)
+    plane = ops.vp_matmul(
+        a_m, a_i, b_m, b_i, W_VP, Y_VP, interpret=interpret)
+    packed = ops.vp_matmul(
+        a_w, None, b_w, None, W_VP, Y_VP, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(plane))
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+def test_matmul_mixed_layout_bit_identical(interpret):
+    """One packed operand + one plane pair still matches the plane path."""
+    a, b = _float_operands(32, 48, 8)
+    a_m, a_i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    b_m, b_i = ops.vp_quant(b, Y_FXP, Y_VP, interpret=interpret)
+    a_w = pack_vp(a_m, a_i, W_VP)
+    plane = ops.vp_matmul(a_m, a_i, b_m, b_i, W_VP, Y_VP,
+                          interpret=interpret)
+    mixed = ops.vp_matmul(a_w, None, b_m, b_i, W_VP, Y_VP,
+                          interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(mixed), np.asarray(plane))
+
+
+@pytest.mark.parametrize("interpret", [None, True], ids=["ref", "interpret"])
+@pytest.mark.parametrize("shape", [(1, 16, 64, 2), (5, 16, 64, 2),
+                                   (3, 13, 50, 1)])
+def test_batched_matmul_packed_bit_identical(shape, interpret):
+    G, M, K, N = shape
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_t(2, (G, M, K)).clip(-8, 8) * 0.01,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_t(2, (G, K, N)).clip(-8, 8), jnp.float32)
+    a_m, a_i = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret)
+    b_m, b_i = ops.vp_quant(b, Y_FXP, Y_VP, interpret=interpret)
+    a_w = ops.vp_quant(a, W_FXP, W_VP, interpret=interpret, packed=True)
+    b_w = ops.vp_quant(b, Y_FXP, Y_VP, interpret=interpret, packed=True)
+    plane = ops.vp_matmul_batched(
+        a_m, a_i, b_m, b_i, W_VP, Y_VP, interpret=interpret)
+    packed = ops.vp_matmul_batched(
+        a_w, None, b_w, None, W_VP, Y_VP, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(plane))
+    # ... and the fused float path still matches both (it never packs).
+    fused = ops.vp_quant_matmul_batched(
+        a, b, W_FXP, W_VP, Y_FXP, Y_VP, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(packed))
+
+
+@given(fmt_a=vp_formats(), fmt_b=vp_formats(), seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_property_packed_matmul_random_formats(fmt_a, fmt_b, seed):
+    """Packed == plane matmul over RANDOM format pairs (ref backend)."""
+    rng = np.random.default_rng(seed)
+    a_m = jnp.asarray(
+        rng.integers(fmt_a.raw_min, fmt_a.raw_max + 1, (24, 32)), jnp.int32)
+    a_i = jnp.asarray(rng.integers(0, fmt_a.K, (24, 32)), jnp.int32)
+    b_m = jnp.asarray(
+        rng.integers(fmt_b.raw_min, fmt_b.raw_max + 1, (32, 8)), jnp.int32)
+    b_i = jnp.asarray(rng.integers(0, fmt_b.K, (32, 8)), jnp.int32)
+    plane = ops.vp_matmul(a_m, a_i, b_m, b_i, fmt_a, fmt_b)
+    packed = ops.vp_matmul(
+        pack_vp(a_m, a_i, fmt_a), None, pack_vp(b_m, b_i, fmt_b), None,
+        fmt_a, fmt_b)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(plane))
