@@ -20,7 +20,7 @@ from .fxp import (
 from .convert import fxp2vp, fxp2vp_bitwindow, vp2fxp, vp_to_float, float_to_vp
 from .vp_math import vp_mul, vp_mul_to_fxp, product_scale_lut
 from .vp_tensor import VPTensor, pack_indices, unpack_indices, significand_dtype
-from .packing import pack_vp, unpack_vp, storage_dtype
+from .packing import pack_vp, unpack_vp, storage_dtype, dequant_words
 from .quantize import (
     vp_quantize,
     vp_dequantize,
@@ -39,7 +39,7 @@ __all__ = [
     "fxp2vp", "fxp2vp_bitwindow", "vp2fxp", "vp_to_float", "float_to_vp",
     "vp_mul", "vp_mul_to_fxp", "product_scale_lut",
     "VPTensor", "pack_indices", "unpack_indices", "significand_dtype",
-    "pack_vp", "unpack_vp", "storage_dtype",
+    "pack_vp", "unpack_vp", "storage_dtype", "dequant_words",
     "vp_quantize", "vp_dequantize", "vp_fake_quant", "vp_fake_quant_ste",
     "block_vp_quantize", "block_vp_dequantize", "per_channel_fxp_scales",
     "param_search", "cost_model",

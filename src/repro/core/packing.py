@@ -25,7 +25,10 @@ in-kernel unpack path (tests/test_packing.py property-tests
 """
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
+import numpy as np
 
 from .formats import VPFormat
 
@@ -64,3 +67,46 @@ def unpack_vp(w, fmt: VPFormat):
     m = jnp.right_shift(wi, fmt.E)
     i = jnp.bitwise_and(wi, fmt.K - 1)
     return m, i
+
+
+# ---------------------------------------------------------------------------
+# Whole-word dequant LUT (the paper's offline exponent LUT, word-granular)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dequant_lut_np(fmt: VPFormat) -> np.ndarray:
+    """Offline table: packed-word low bits -> real value, 2^(M+E) entries.
+
+    A packed VP word carries only M + E information bits, so the ENTIRE
+    dequant (sign-extend, index extract, exponent scale) collapses into
+    one table lookup built offline — the software analogue of the paper's
+    Sec. II-B offline LUTs, lifted from exponent-granular to
+    word-granular.  Every entry is (M-bit int) * 2^-f_i: exactly
+    representable in f32, so LUT dequant is BIT-IDENTICAL to the
+    shift/mask/scale path (tests/test_packing.py pins it).
+    """
+    bits = fmt.M + fmt.E
+    idx = np.arange(1 << bits)
+    m = (idx >> fmt.E).astype(np.int64)
+    m = np.where(m >= (1 << (fmt.M - 1)), m - (1 << fmt.M), m)
+    i = idx & (fmt.K - 1)
+    return (m * (2.0 ** (-np.asarray(fmt.f, np.float64))[i])).astype(
+        np.float32)
+
+
+def dequant_words(w, fmt: VPFormat, dtype=jnp.float32):
+    """Packed words -> real values via the cheapest exact path.
+
+    Formats up to 12 information bits (4096-entry table) dequantize with
+    ONE gather from the offline word LUT; wider formats (or non-f32
+    consumers, where LUT entries would round) fall back to the two-op
+    unpack + exponent scale.  Both are exact and bit-identical in f32.
+    """
+    bits = fmt.M + fmt.E
+    if bits <= 12 and dtype == jnp.float32:
+        lut = jnp.asarray(_dequant_lut_np(fmt))
+        u = jnp.bitwise_and(w.astype(jnp.int32), (1 << bits) - 1)
+        return jnp.take(lut, u, axis=0)
+    m, i = unpack_vp(w, fmt)
+    scales = jnp.asarray([2.0 ** (-fk) for fk in fmt.f], dtype)
+    return m.astype(dtype) * scales[i]

@@ -28,6 +28,7 @@ cost speed, never correctness.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import threading
@@ -229,6 +230,61 @@ def default_candidates(M: int, K: int, N: int) -> Tuple[Blocks, ...]:
             seen.add(c)
             out.append(c)
     return tuple(out)
+
+
+def skinny_candidates(M: int, K: int, N: int) -> Tuple[Blocks, ...]:
+    """Candidate tilings for skinny-M (LLM decode) shapes.
+
+    Decode multiplies an (M = batch, K) activation block against a wide
+    (K, N) weight panel, so M is tiny while K/N are model dimensions: the
+    interesting trade is how much of the weight panel to stream per tile
+    (bigger bk*bn amortizes the per-tile unpack/dequant; smaller tiles
+    keep the accumulator cheap).  The square `default_candidates` never
+    explore that axis, so serving adds K/N-elongated tiles at the snug M.
+    """
+    bm = min(_BASE[0], _pow2_at_least(max(M, 1)))
+    cands = list(default_candidates(M, K, N))
+    for bk, bn in ((256, 512), (512, 256), (512, 512), (128, 512)):
+        cands.append((
+            bm,
+            min(bk, _pow2_at_least(max(K, 1))),
+            min(bn, _pow2_at_least(max(N, 1))),
+        ))
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return tuple(out)
+
+
+def tune_serving_decode(
+    kernel: str,
+    K: int,
+    N: int,
+    formats: Sequence,
+    backend: str,
+    bench_fn: Callable[[int, Blocks], None],
+    batch_sizes: Sequence[int] = (1, 2, 4, 8),
+    repeats: int = 3,
+) -> Dict[int, Blocks]:
+    """The M=1..B skinny-decode profile for a serving matmul.
+
+    Tunes `kernel` at every decode batch size in `batch_sizes` over the
+    fixed (K, N) weight panel — one persisted cache entry per (M, K, N)
+    — so a serving process decoding at any of those batch sizes hits a
+    measured tiling from `resolve_blocks`.  `bench_fn(M, blocks)` must
+    run the kernel to completion at activation shape (M, K).
+    """
+    out: Dict[int, Blocks] = {}
+    for M in batch_sizes:
+        out[M] = tune(
+            kernel, (M, K, N), formats, backend,
+            functools.partial(bench_fn, M),
+            candidates=skinny_candidates(M, K, N),
+            repeats=repeats,
+        )
+    return out
 
 
 def tune(

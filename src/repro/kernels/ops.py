@@ -37,6 +37,7 @@ from repro.core import packing as pk
 from . import autotune, ref, substrate
 from .vp_quant import vp_quant_pallas, vp_quant_packed_pallas
 from .vp_dequant import vp_dequant_pallas, vp_dequant_packed_pallas
+from .vp_dequant_matmul import vp_dequant_matmul_pallas
 from .vp_matmul import vp_matmul_pallas, vp_matmul_batched_pallas
 from .vp_block_matmul import block_vp_matmul_pallas
 from .vp_quant_matmul import (
@@ -258,6 +259,42 @@ def vp_matmul(
     return out[:M, :N]
 
 
+def vp_dequant_matmul(
+    x, w,
+    w_fmt: VPFormat,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+):
+    """Serving matmul: real x (M, K) @ dequant(w (K, N) packed VP words).
+
+    THE model-zoo decode/prefill hot path (`models.layers.qdot`, mode
+    "vp"): one real operand, one packed-word operand consumed directly by
+    the kernel — no f32 weight plane in HBM.  `blocks=None` resolves
+    through the autotuner, so skinny decode shapes (M = batch) launch the
+    tuned/clamped tiling instead of padding up to 256^3 (see
+    `autotune.tune_serving_decode` for the M=1..B profile).  `out_dtype`
+    defaults to the activation dtype (the models' compute dtype).
+    """
+    M, K = x.shape
+    _, N = w.shape
+    out_dtype = x.dtype if out_dtype is None else out_dtype
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        # The ref's math is tile-independent: skip block resolution
+        # entirely (no cache reads, no per-tiling jit signatures).
+        return ref.vp_dequant_matmul_ref(x, w, w_fmt, out_dtype=out_dtype)
+    blocks = _resolve_blocks(
+        "vp_dequant_matmul", (M, K, N), (w_fmt,), backend, blocks, None)
+    bm, bk, bn = blocks
+    xp, wp = _pad2(x, bm, bk), _pad2(w, bk, bn)
+    out = vp_dequant_matmul_pallas(
+        xp, wp, w_fmt,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:M, :N]
+
+
 def vp_quant_matmul(
     a, b,
     a_fxp: FXPFormat, a_vp: VPFormat,
@@ -410,11 +447,15 @@ def block_vp_matmul(
     M, K = a_m.shape
     _, N = b_m.shape
     if blocks is None:
-        # The k-tile is pinned to the index block size; clamp m/n only.
-        h = autotune.heuristic_blocks(M, K, N)
-        if backend == "native":
-            h = autotune._native_floor(h)
-        blocks = (h[0], bk, h[2])
+        # Autotune-resolve like every other matmul op (the qdot vp_block
+        # path used to hardcode 256^3-class tiles here, bypassing the
+        # cache entirely); the k-tile stays pinned to the index block
+        # size whatever the cache says — it is part of the format, not a
+        # free tiling axis, so the kernel name carries it in the key.
+        r = autotune.resolve_blocks(
+            f"block_vp_matmul_bk{bk}", (M, K, N), (a_fmt, b_fmt),
+            backend, None)
+        blocks = (r[0], bk, r[2])
     bm, _, bn = blocks
     am = _pad2(a_m, bm, bk)
     bm_ = _pad2(b_m, bk, bn)

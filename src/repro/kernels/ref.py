@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.formats import FXPFormat, VPFormat
 from repro.core.fxp import fxp_quantize
 from repro.core.convert import fxp2vp, vp_to_float
-from repro.core.packing import pack_vp, unpack_vp
+from repro.core.packing import pack_vp, unpack_vp, dequant_words
 
 
 @functools.partial(jax.jit, static_argnames=("fxp", "vp"))
@@ -52,8 +52,8 @@ def vp_dequant_ref(m, i, vp: VPFormat, dtype=jnp.float32):
 
 @functools.partial(jax.jit, static_argnames=("vp", "dtype"))
 def vp_dequant_packed_ref(w, vp: VPFormat, dtype=jnp.float32):
-    """packed VP words -> real values (unpack + dequant oracle)."""
-    return vp_to_float(*unpack_vp(w, vp), vp, dtype)
+    """packed VP words -> real values (word-LUT / unpack oracle)."""
+    return dequant_words(w, vp, dtype)
 
 
 def tile_activity(x_abs_max, threshold: float):
@@ -134,6 +134,30 @@ def vp_matmul_packed_ref(
     return vp_matmul_ref(
         a_m, a_i, b_m, b_i, a_fmt, b_fmt,
         a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("w_fmt", "out_dtype"))
+def vp_dequant_matmul_ref(
+    x, w,
+    w_fmt: VPFormat,
+    out_dtype=jnp.float32,
+):
+    """Serving-matmul oracle: real x (M, K) @ dequant(packed w (K, N)).
+
+    Unpack + dequant happen INSIDE the jit in `out_dtype` (the model's
+    compute dtype), then one plain dot — exactly the computation the
+    models' legacy jnp-dequant path ran on two-plane weights, so the
+    cross-arch golden-parity suite can pin the kernel path against it
+    bit for bit (power-of-two scales are exact in any float dtype).
+    Unlike the masked-matmul oracles this one takes NO `tiles`: the math
+    is tile-independent, and a static tiling arg would force a fresh XLA
+    compile per resolved block triple (pure churn on the ref backend).
+    Dequant goes through the offline whole-word LUT
+    (`core.packing.dequant_words`) when the format admits it — one gather
+    per element instead of shift+mask+scale, bit-identical either way.
+    """
+    deq = dequant_words(w, w_fmt, out_dtype)
+    return jnp.dot(x.astype(out_dtype), deq)
 
 
 @functools.partial(

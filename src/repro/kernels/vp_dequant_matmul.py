@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: float activations x PACKED VP weights (LLM serving).
+
+The serving-datapath analogue of the paper's B-VP MVM for the model zoo:
+activations arrive as reals (bf16/f32 — they were just produced by the
+previous layer), weights arrive as packed VP words (`core.packing`: sign +
+significand + exponent index in ONE int8/int16 per element).  Each weight
+tile is unpacked in-register (arithmetic shift + mask) and scaled by the
+O(1) bit-assembled power-of-two (`substrate.dequant_packed`) before the
+MXU dot — the f32 weight matrix never exists in HBM, which is the VP
+claim (compact words feed the multiplier directly) restated as a serving
+kernel.
+
+Grid is (m, n, k) with k innermost; a VMEM f32 scratch accumulates across
+k steps and flushes on the last step.  Compared to `vp_matmul` this kernel
+has exactly ONE quantized operand: LLM decode multiplies a skinny real
+activation block (M = batch) against a wide packed weight panel, so the A
+tile rides HBM at its real dtype while B moves `storage_bits` per element.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import VPFormat
+from . import substrate as sub
+
+BM, BK, BN = 256, 256, 256
+
+
+def _vp_dequant_matmul_kernel(
+    x_ref, w_ref, o_ref, acc_ref, *, w_fmt: VPFormat, nk: int, dtype,
+):
+    ki = pl.program_id(2)
+    sub.accum_init(acc_ref, ki)
+    w = sub.dequant_packed(w_ref[...], w_fmt, dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(dtype), w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    sub.accum_flush(o_ref, acc_ref, ki, nk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w_fmt", "interpret", "blocks", "out_dtype"),
+)
+def vp_dequant_matmul_pallas(
+    x, w,
+    w_fmt: VPFormat,
+    interpret: bool = False,
+    blocks=(BM, BK, BN),
+    out_dtype=jnp.float32,
+):
+    """x (M, K) reals @ dequant(w (K, N) packed VP words) -> (M, N).
+
+    The weight tile is unpacked + dequantized in VMEM (shift, mask, O(1)
+    bit-assembled scale) and contracted on the MXU in f32.  Shapes must be
+    tile-multiples of `blocks` (ops.py pads; packed-word 0 decodes to the
+    real value 0, so padding is exact).
+    """
+    (bm, bk, bn) = blocks
+    M, K = x.shape
+    _, N = w.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    kernel = functools.partial(
+        _vp_dequant_matmul_kernel, w_fmt=w_fmt, nk=nk, dtype=jnp.float32)
+    return sub.vp_pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[sub.vmem((bm, bn), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+    )(x, w)

@@ -3,13 +3,27 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 32 --gen 32 --quant vp
 
-With --quant vp the weights are served as VP planes (int8 significands +
-packed 2-bit exponent indices) — the paper's technique as a serving
-feature; --kv-quant additionally VP-quantizes the KV cache.
+With --quant vp the weights are served as PACKED VP words (sign +
+significand + exponent index in one int8/int16 per element,
+`core.packing`), and every weight matmul routes through the Pallas
+`vp_dequant_matmul` kernel — the packed words are consumed directly
+in-tile, never materializing an f32 weight matrix in HBM.  This is the
+paper's technique as a serving feature; the MIMO equalizer and LLM decode
+now exercise the same kernel substrate.
+
+  --layout planes   legacy two-plane jnp-dequant serving (the golden
+                    baseline the parity suite pins the kernel against)
+  --kv-quant        additionally VP-quantizes the KV cache
+  --tune-decode     run the M=1..B skinny-decode autotune profile over the
+                    model's weight panels before serving (persisted in the
+                    autotune cache, so later launches hit measured tilings)
+  --json F          write a serving report (tokens/sec, packed bytes) to F
+  --smoke           reduced config; also ASSERTS finite logits end to end
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -20,6 +34,82 @@ from repro.configs.base import QuantConfig
 from repro.models import (
     init_params, init_cache, prefill, decode_step, quantize_params,
 )
+from repro.models.layers import canonical_formats
+
+
+def _quantized_bytes(params) -> int:
+    """Bytes of integer serving storage (packed words / significand and
+    index planes; float32 scale tensors are NOT counted)."""
+    return int(sum(
+        l.size * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(params)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.integer)))
+
+
+def _weight_panels(params):
+    """Distinct (d_in, d_out) of every packed weight that feeds the
+    serving matmul.
+
+    The embedding table is excluded: it is consumed by `embed_lookup` as
+    a row GATHER, never by `vp_dequant_matmul` — tuning a (vocab, d)
+    panel would burn vocab-sized benchmark matmuls and persist cache
+    entries nothing reads (lm_head's (d, vocab) panel is the real one).
+    """
+    panels = set()
+
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            if "w_packed" in node:
+                if name != "embed":
+                    w = node["w_packed"]
+                    panels.add((int(w.shape[-2]), int(w.shape[-1])))
+                return
+            for k, v in node.items():
+                walk(v, k)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v, name)
+
+    walk(params)
+    return sorted(panels)
+
+
+def tune_decode_profile(params, cfg, batch: int, seed: int = 0):
+    """Tune `vp_dequant_matmul` for every weight panel at M = 1..batch.
+
+    The persisted entries are keyed on (kernel, (M, K, N), format,
+    backend), so any serving process with the same model dims launches
+    the measured-best tiling from `resolve_blocks` with zero overhead.
+    """
+    from repro.kernels import autotune, ops, substrate
+    from repro.core.packing import storage_dtype
+
+    _, vp = canonical_formats(cfg.quant)
+    backend = substrate.resolve_backend(None)
+    if backend == "ref":
+        # The ref path's math is tile-independent and never reads the
+        # cache — measuring candidates here would record pure timer
+        # noise and burn minutes of model-size matmuls for nothing.
+        print("[serve] decode autotune profile skipped: backend is the "
+              "jnp ref (blocks only affect kernel backends)")
+        return {}
+    key = jax.random.PRNGKey(seed)
+    sizes = tuple(sorted({1 << p for p in range(batch.bit_length())
+                          if (1 << p) <= batch} | {batch}))
+    profile = {}
+    for K, N in _weight_panels(params):
+        w = jax.random.randint(
+            key, (K, N), -8, 8).astype(storage_dtype(vp))
+        x_full = jax.random.normal(key, (max(sizes), K), jnp.float32)
+
+        def bench(M, blocks, w=w, x_full=x_full):
+            jax.block_until_ready(ops.vp_dequant_matmul(
+                x_full[:M], w, vp, blocks=blocks))
+
+        profile[(K, N)] = autotune.tune_serving_decode(
+            "vp_dequant_matmul", K, N, (vp,), backend, bench,
+            batch_sizes=sizes)
+    return profile
 
 
 def main():
@@ -32,20 +122,56 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--quant", default="none",
                     choices=["none", "fxp", "vp", "vp_block"])
+    ap.add_argument("--layout", default="packed",
+                    choices=["packed", "planes"],
+                    help="VP weight storage: packed kernel words (default)"
+                         " or the legacy jnp-dequant two-plane baseline")
+    ap.add_argument("--M", type=int, default=7,
+                    help="VP significand bits; M+E <= 8 packs weights "
+                         "into int8 words (half the bytes of bf16)")
+    ap.add_argument("--E", type=int, default=2,
+                    help="VP exponent-index bits (2^E exponent options)")
+    ap.add_argument("--block", type=int, default=256,
+                    help="vp_block index granularity; must divide the "
+                         "contraction dims to engage the int8-MXU path "
+                         "(non-tileable weights fall back to per-element "
+                         "packed VP)")
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--tune-decode", action="store_true",
+                    help="autotune the serving kernel at M=1..batch first")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="write a serving report (tokens/sec) to FILE")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    quant = QuantConfig(mode=args.quant, quantize_kv_cache=args.kv_quant)
+    quant = QuantConfig(mode=args.quant, M=args.M, E=args.E,
+                        block=args.block,
+                        quantize_kv_cache=args.kv_quant)
     cfg = (registry.get_smoke_config(args.arch, quant) if args.smoke
            else registry.get_config(args.arch, quant))
     key = jax.random.PRNGKey(0)
     params = init_params(key, cfg)
+    report = {"arch": args.arch, "quant": args.quant, "layout": args.layout,
+              "smoke": bool(args.smoke), "batch": args.batch,
+              "prompt_len": args.prompt_len, "gen": args.gen}
     if args.quant != "none":
-        params = quantize_params(params, cfg)
-        n_int8 = sum(l.size for l in jax.tree_util.tree_leaves(params)
-                     if hasattr(l, "dtype") and l.dtype == jnp.int8)
-        print(f"[serve] VP planes: {n_int8/1e6:.2f}M int8 significands")
+        params = quantize_params(params, cfg, layout=args.layout)
+        qbytes = _quantized_bytes(params)
+        report["quantized_bytes"] = qbytes
+        if args.quant == "vp" and args.layout == "packed":
+            _, vp = canonical_formats(cfg.quant)
+            print(f"[serve] packed VP words: {qbytes/1e6:.2f} MB "
+                  f"({vp.storage_bits} bits/param, kernel-backed qdot)")
+        else:
+            print(f"[serve] quantized planes: {qbytes/1e6:.2f} MB")
+        if args.tune_decode and args.quant == "vp" \
+                and args.layout == "packed":
+            t0 = time.time()
+            prof = tune_decode_profile(params, cfg, args.batch)
+            if prof:
+                print(f"[serve] decode autotune profile: "
+                      f"{sum(len(v) for v in prof.values())} entries over "
+                      f"{len(prof)} weight panels in {time.time()-t0:.1f}s")
 
     B = args.batch
     prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
@@ -65,7 +191,13 @@ def main():
 
     t0 = time.time()
     logits, caches = prefill(params, prompts, caches, cfg, patches=extra)
-    print(f"[prefill] {B}x{args.prompt_len} in {time.time()-t0:.2f}s")
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+    report["prefill_s"] = prefill_s
+    print(f"[prefill] {B}x{args.prompt_len} in {prefill_s:.2f}s")
+    if args.smoke:
+        assert bool(jnp.isfinite(logits).all()), \
+            f"non-finite prefill logits ({args.arch}, {args.quant})"
 
     decode = jax.jit(
         lambda p, t, c: decode_step(p, t, c, cfg, cross_kv=cross_kv)
@@ -83,11 +215,22 @@ def main():
                 sub, logits / args.temperature)[:, None]
         else:
             tok = jnp.argmax(logits, -1)[:, None]
+    jax.block_until_ready(logits)
     dt = time.time() - t0
+    if args.smoke:
+        assert bool(jnp.isfinite(logits).all()), \
+            f"non-finite decode logits ({args.arch}, {args.quant})"
     gen = jnp.concatenate(out_tokens, axis=1)
+    tok_s = B * args.gen / dt
+    report["decode_s"] = dt
+    report["tokens_per_s"] = tok_s
     print(f"[decode] {args.gen} steps x batch {B}: {dt:.2f}s "
-          f"({B*args.gen/dt:.1f} tok/s)")
+          f"({tok_s:.1f} tok/s)")
     print("[sample tokens]", np_preview(gen))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[serve] wrote report to {args.json}")
 
 
 def np_preview(x):

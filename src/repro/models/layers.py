@@ -5,14 +5,20 @@ dispatches on the model's QuantConfig:
 
   none      x @ W                          (bf16/f32 baseline)
   fxp       x @ (int8 W * 2^-F)            (plain fixed-point baseline)
-  vp        x @ vp_dequant(m, i) * s       (paper-faithful: int8 significand
-                                            + PACKED 2-bit index planes in
-                                            the param pytree -> the dry-run's
-                                            HLO bytes show the 8.25-bit
-                                            weight traffic)
+  vp        vp_dequant_matmul(x, Wpacked)  (paper-faithful, kernel-backed:
+                                            ONE packed VP word per weight
+                                            in the param pytree, consumed
+                                            directly by the Pallas kernel —
+                                            unpack + pow2 scale in-tile, no
+                                            f32 weight matrix in HBM.  The
+                                            legacy layout="planes" two-plane
+                                            jnp-dequant path is kept as the
+                                            golden parity baseline.)
   vp_block  block_vp_matmul(xq, Wq)        (beyond-paper: int8 MXU matmuls,
                                             LUT scales; activations are
-                                            dynamically block-VP quantized)
+                                            dynamically block-VP quantized;
+                                            non-tileable weights fall back
+                                            to per-element packed VP)
 
 Training uses float master weights with an STE fake-quant (QAT); the
 quantized representations are produced by `quantize_params` at
@@ -32,7 +38,9 @@ from repro.core import (
     default_vp_format,
     vp_fake_quant_ste,
     block_vp_quantize,
+    block_vp_dequantize,
 )
+from repro.core.packing import dequant_words
 from repro.core.vp_tensor import pack_indices, unpack_indices
 from repro.configs.base import QuantConfig
 from repro.kernels import ops as kops
@@ -48,17 +56,35 @@ def canonical_formats(q: QuantConfig):
 
 
 def _pow2_scale(w) -> jax.Array:
-    """Smallest power of two >= max|w| (keeps normalized w in (-1, 1))."""
+    """Smallest power of two >= max|w| (keeps normalized w in (-1, 1)).
+
+    An all-zero tensor has no magnitude to normalize: the clamp floor
+    used to leak through the log2 and produce a spurious ~2^-100 scale
+    (harmless numerically — 0/s is still 0 — but it poisoned recorded
+    scales and divided activations by a denormal-adjacent constant).
+    Zero tensors get scale 1.0 (still a power of two, still exact).
+    """
     amax = jnp.max(jnp.abs(w))
-    return jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
+    s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
+    return jnp.where(amax > 0, s, 1.0)
 
 
 # ---------------------------------------------------------------------------
 # Weight quantization (export-time transform)
 # ---------------------------------------------------------------------------
 
-def quantize_weight(w: jax.Array, q: QuantConfig) -> Dict[str, jax.Array]:
-    """Convert a float weight matrix (d_in, d_out) to its serving form."""
+def quantize_weight(w: jax.Array, q: QuantConfig,
+                    layout: str = "packed") -> Dict[str, jax.Array]:
+    """Convert a float weight matrix (d_in, d_out) to its serving form.
+
+    `layout` selects the VP storage the serving path consumes:
+      "packed"  one packed VP word per element (`core.packing`,
+                `vp.storage_bits` bits/param) — the layout the Pallas
+                `vp_dequant_matmul` kernel reads directly; the DEFAULT.
+      "planes"  the legacy two-plane layout (int8 significand + bit-packed
+                index plane), dequantized in jnp — kept as the golden
+                baseline the parity suite pins the kernel path against.
+    """
     fxp, vp = canonical_formats(q)
     if q.mode == "none":
         return {"w": w}
@@ -68,6 +94,9 @@ def quantize_weight(w: jax.Array, q: QuantConfig) -> Dict[str, jax.Array]:
         m = jnp.clip(jnp.round(wn * 127.0), -128, 127).astype(jnp.int8)
         return {"m": m, "scale": (s / 127.0).astype(jnp.float32)}
     if q.mode == "vp":
+        if layout == "packed":
+            wp = kops.vp_quant(wn.astype(jnp.float32), fxp, vp, packed=True)
+            return {"w_packed": wp, "scale": s.astype(jnp.float32)}
         m, i = kops.vp_quant(wn.astype(jnp.float32), fxp, vp)
         d_in = w.shape[0]
         pad = (-d_in) % (8 // vp.E) if vp.E else 0
@@ -82,8 +111,9 @@ def quantize_weight(w: jax.Array, q: QuantConfig) -> Dict[str, jax.Array]:
     if q.mode == "vp_block":
         if w.shape[0] % q.block:
             # contraction dim not tileable (e.g. embedding tables indexed
-            # by vocab): fall back to per-element VP planes
-            return quantize_weight(w, dataclasses_replace_mode(q, "vp"))
+            # by vocab): fall back to per-element VP
+            return quantize_weight(
+                w, dataclasses_replace_mode(q, "vp"), layout=layout)
         m, i_blk = block_vp_quantize(
             wn.astype(jnp.float32), fxp, vp, block=q.block, axis=0)
         return {"m": m, "i_blk": i_blk, "scale": s.astype(jnp.float32)}
@@ -112,6 +142,17 @@ def _dequant_vp_weight(wq: Dict[str, jax.Array], q: QuantConfig, dtype):
     return m.astype(dtype) * scales[i.astype(jnp.int32)] * wq["scale"].astype(dtype)
 
 
+def _dequant_vp_packed(w_packed: jax.Array, scale, q: QuantConfig, dtype):
+    """Packed VP words -> real weights (jnp; for gather-style consumers).
+
+    The matmul path never calls this — `qdot` hands the packed words to
+    the kernel op — but embedding lookups and stacked-expert einsums need
+    real values; `core.packing.dequant_words` picks the offline word-LUT
+    gather (or shift+mask for wide formats), bit-identical either way."""
+    _, vp = canonical_formats(q)
+    return dequant_words(w_packed, vp, dtype) * jnp.asarray(scale, dtype)
+
+
 def qdot(x: jax.Array, wq: Any, q: QuantConfig,
          train: bool = False) -> jax.Array:
     """x (..., d_in) @ W (d_in, d_out) under the quantization mode.
@@ -127,10 +168,27 @@ def qdot(x: jax.Array, wq: Any, q: QuantConfig,
             s = _pow2_scale(jax.lax.stop_gradient(w))
             w = vp_fake_quant_ste(w / s, fxp, vp) * s
         return jnp.dot(x, w.astype(dtype))
+    if q.mode == "none":
+        return jnp.dot(x, wq["w"].astype(dtype))
     if q.mode == "fxp":
         w = wq["m"].astype(dtype) * wq["scale"].astype(dtype)
         return jnp.dot(x, w)
-    if q.mode == "vp":
+    if q.mode in ("vp", "vp_block") and (
+            "w_packed" in wq or "i_packed" in wq):
+        # Per-element VP serving: the "vp" mode proper, or a "vp_block"
+        # weight whose contraction dim was not block-tileable (the
+        # quantize_weight fallback).  Dispatch is on the dict KEYS.
+        if "w_packed" in wq:
+            # Kernel-backed path: the packed words go straight to the
+            # Pallas kernel (unpack + bit-assembled scale in-tile); the
+            # per-tensor pow2 scale commutes exactly with the contraction.
+            _, vp = canonical_formats(q)
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1])
+            out = kops.vp_dequant_matmul(
+                x2, wq["w_packed"], vp, out_dtype=dtype)
+            out = out * wq["scale"].astype(dtype)
+            return out.reshape(*lead, -1)
         w = _dequant_vp_weight(wq, q, dtype)
         return jnp.dot(x, w)
     if q.mode == "vp_block":
@@ -143,7 +201,7 @@ def qdot(x: jax.Array, wq: Any, q: QuantConfig,
         a_m, a_i = block_vp_quantize(x2 / sa, fxp, vp, block=q.block, axis=-1)
         out = kops.block_vp_matmul(
             a_m, a_i, wq["m"], wq["i_blk"], vp, vp, bk=q.block,
-            blocks=(256, q.block, 256))
+            blocks=None)
         out = out * (sa * wq["scale"]).astype(out.dtype)
         return out.reshape(*lead, -1).astype(dtype)
     raise ValueError(q.mode)
@@ -195,6 +253,12 @@ def embed_lookup(tokens, table, q: QuantConfig, train: bool = False):
     Dispatches on the dict KEYS (a vp_block model may carry a per-element
     VP embedding when the vocab is not tileable)."""
     if isinstance(table, dict):
+        if "w_packed" in table:
+            # Gather the PACKED rows first, then dequantize just those:
+            # O(tokens * d) unpack work instead of O(vocab * d) — the
+            # packed layout makes the embedding the cheapest quant path.
+            rows = jnp.take(table["w_packed"], tokens, axis=0)
+            return _dequant_vp_packed(rows, table["scale"], q, jnp.float32)
         if "i_packed" in table:
             w = _dequant_vp_weight(table, q, jnp.float32)
         elif "i_blk" in table:

@@ -698,8 +698,15 @@ def prefill(params, tokens, caches, cfg: ModelConfig, patches=None):
     return logits.astype(jnp.float32), new_caches
 
 
-def quantize_params(params, cfg: ModelConfig):
-    """Export-time transform: float weights -> serving representation."""
+def quantize_params(params, cfg: ModelConfig, layout: str = "packed"):
+    """Export-time transform: float weights -> serving representation.
+
+    `layout` (VP modes only) picks the storage the serving path consumes:
+    "packed" (default) emits ONE packed VP word per element — the layout
+    the Pallas `vp_dequant_matmul` kernel reads directly in `qdot`;
+    "planes" emits the legacy two-plane layout dequantized in jnp (the
+    golden baseline the cross-arch parity suite pins the kernel against).
+    """
     if cfg.quant.mode == "none":
         return params
     QUANT_KEYS = {
@@ -709,19 +716,20 @@ def quantize_params(params, cfg: ModelConfig):
         "embed", "lm_head", "patch_proj",
     }
 
+    def qw(w):
+        return quantize_weight(w, cfg.quant, layout=layout)
+
     def walk(node):
         if isinstance(node, dict):
             out = {}
             for k, v in node.items():
                 if k in QUANT_KEYS and isinstance(v, jax.Array):
                     if v.ndim == 2:
-                        out[k] = quantize_weight(v, cfg.quant)
+                        out[k] = qw(v)
                     elif v.ndim == 3:  # stacked (L or E, d_in, d_out)
-                        out[k] = jax.vmap(
-                            lambda w: quantize_weight(w, cfg.quant))(v)
+                        out[k] = jax.vmap(qw)(v)
                     elif v.ndim == 4:  # layer- AND expert-stacked MoE
-                        out[k] = jax.vmap(jax.vmap(
-                            lambda w: quantize_weight(w, cfg.quant)))(v)
+                        out[k] = jax.vmap(jax.vmap(qw))(v)
                     else:
                         out[k] = v
                 elif isinstance(v, (dict, list)):

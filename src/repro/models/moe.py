@@ -123,6 +123,16 @@ def _w(wq, q: QuantConfig, dtype):
     """Materialize a (possibly quantized) stacked expert weight for einsum."""
     if not isinstance(wq, dict):
         return wq.astype(dtype)
+    if "w_packed" in wq:      # packed VP words (kernel serving layout)
+        # dequant_words is elementwise over any rank — no per-expert vmap
+        # needed (unlike the i_packed branch, whose index unpack is
+        # axis-dependent).
+        from .layers import canonical_formats
+        from repro.core.packing import dequant_words
+        _, vp = canonical_formats(q)
+        scale = jnp.asarray(wq["scale"], dtype).reshape(
+            (-1,) + (1,) * (wq["w_packed"].ndim - 1))
+        return dequant_words(wq["w_packed"], vp, dtype) * scale
     scale = jnp.asarray(wq["scale"], dtype).reshape(
         (-1,) + (1,) * (wq["m"].ndim - 1))
     if "i_packed" in wq:      # per-element VP planes

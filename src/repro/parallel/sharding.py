@@ -91,10 +91,11 @@ def _spec_for_path(path: str, leaf, cfg: ModelConfig, tp: int,
     models / pure-TP serving).
     """
     name = path.split("/")[-1]
-    # Quantized leaves ("m", "i_packed", "i_blk") inherit the spec of their
-    # parent weight via the SAME rules keyed on the parent name.
+    # Quantized leaves ("m", "i_packed", "i_blk", packed serving words)
+    # inherit the spec of their parent weight via the SAME rules keyed on
+    # the parent name.
     parent = path.split("/")[-2] if "/" in path else ""
-    if name in ("m", "i_packed", "i_blk"):
+    if name in ("m", "i_packed", "i_blk", "w_packed"):
         name = parent
     elif name in ("scale", "b") or leaf.ndim <= 1:
         return P()

@@ -91,6 +91,40 @@ def test_bit_assembled_scale_bit_identical(fmt, seed):
             np.asarray(sub.scale_bit_assemble(i, fmt)), want)
 
 
+@given(fmt=vp_formats(), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_dequant_words_bit_identical(fmt, seed):
+    """The whole-word offline dequant LUT (PR 4, `dequant_words`) ==
+    unpack + exponent scale, bit for bit, over random formats.
+
+    Formats up to 12 information bits take the one-gather LUT path;
+    wider ones fall back to shift/mask — both must equal the two-plane
+    dequant exactly (every LUT entry is int * 2^-f, exact in f32)."""
+    from repro.core import dequant_words
+    from repro.core.convert import vp_to_float
+
+    m, i = _random_planes(fmt, seed)
+    w = pack_vp(m, i, fmt)
+    want = np.asarray(vp_to_float(m, i, fmt, jnp.float32))
+    got = np.asarray(dequant_words(w, fmt, jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(fmt=vp_formats(), seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_property_dequant_matmul_random_formats(fmt, seed):
+    """`vp_dequant_matmul` (the serving op: real x packed weights) ==
+    dequant-then-dot over random formats, bit for bit on the ref path."""
+    rng = np.random.default_rng(seed)
+    m, i = _random_planes(fmt, seed, shape=(32, 8))
+    w = pack_vp(m, i, fmt)
+    x = jnp.asarray(rng.standard_normal((5, 32)), jnp.float32)
+    got = ops.vp_dequant_matmul(x, w, fmt)
+    from repro.core.convert import vp_to_float
+    want = jnp.dot(x, vp_to_float(m, i, fmt, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @given(fmt=vp_formats())
 @settings(max_examples=40, deadline=None)
 def test_storage_bits_accounting(fmt):

@@ -91,13 +91,25 @@ def test_quantize_weight_qdot_consistency(mode):
 
 
 def test_vp_weight_storage_is_packed():
-    """Serving representation: int8 significands + PACKED index plane
-    (4 indices/byte for E=2) => ~8.25 bits/element."""
+    """Serving representations, both layouts.
+
+    Default "packed": ONE packed VP word per element (the layout the
+    Pallas vp_dequant_matmul kernel consumes directly).  Legacy "planes":
+    int8 significands + PACKED index plane (4 indices/byte for E=2)
+    => ~10.25 bits/element, kept as the jnp-dequant golden baseline."""
+    from repro.core.packing import storage_dtype
+    from repro.models.layers import canonical_formats
+
     q = QuantConfig(mode="vp")
+    _, vp = canonical_formats(q)
     w = hdr((256, 64), 7)
     wq = quantize_weight(w, q)
-    assert wq["m"].dtype == jnp.int8 and wq["m"].shape == (256, 64)
-    assert wq["i_packed"].dtype == jnp.uint8
-    assert wq["i_packed"].shape == (64, 64)  # 256/4 packed along d_in
-    bits = (wq["m"].size * 8 + wq["i_packed"].size * 8) / w.size
+    assert set(wq) == {"w_packed", "scale"}
+    assert wq["w_packed"].dtype == storage_dtype(vp)
+    assert wq["w_packed"].shape == (256, 64)
+    wl = quantize_weight(w, q, layout="planes")
+    assert wl["m"].dtype == jnp.int8 and wl["m"].shape == (256, 64)
+    assert wl["i_packed"].dtype == jnp.uint8
+    assert wl["i_packed"].shape == (64, 64)  # 256/4 packed along d_in
+    bits = (wl["m"].size * 8 + wl["i_packed"].size * 8) / w.size
     assert bits <= 10.5, bits
