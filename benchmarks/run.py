@@ -21,7 +21,14 @@ PR-4 additions: the serve-decode rows — LLM decode through the model
 zoo's kernel-backed packed serving path (`vp_dequant_matmul` on packed
 VP words, offline word-LUT dequant) against the legacy jnp-dequant
 two-plane baseline, with bit-identical logits asserted inline
-(BENCH_pr4.json records the committed run).  `--smoke` runs only the sweeps at tiny shapes — a CI
+(BENCH_pr4.json records the committed run).
+
+PR-5 additions: the decode-attention rows — packed-word VP KV cache
+through the `vp_decode_attention` kernel op against the legacy
+dequant-whole-cache planes baseline, swept over cache_len and batch
+(plus a windowed row for the O(window) slice path), attention-output
+parity asserted inline (BENCH_pr5.json records the committed run).
+`--smoke` runs only the sweeps at tiny shapes — a CI
 dispatch check for every kernel execution path (batched/masked x
 fused/unfused x packed/plane, flat/vmap wideband, cold/warm autotune
 cache) that fails loudly on kernel dispatch errors.  `--json F` writes
@@ -414,6 +421,14 @@ def smoke():
     # runner noise).
     assert serve_decode_bench(n_steps=4, n_time=3, B=1) >= 1.0, \
         "kernel-backed serve decode lost to the jnp-dequant baseline"
+    # Decode attention: the packed-KV kernel path must never LOSE to the
+    # jnp dequant-whole-cache baseline even at smoke cache lengths (the
+    # >=1.2x target at cache_len >= 1024 is pinned by the committed
+    # BENCH_pr5.json full run).
+    assert decode_attention_bench(cache_lens=(256,), batches=(1,),
+                                  n_time=3, window_rows=False) >= 1.0, \
+        "packed-KV decode attention lost to the dequant-whole-cache " \
+        "baseline"
 
 
 def serve_decode_bench(n_steps=8, n_time=5, B=1):
@@ -509,6 +524,127 @@ def serve_decode_bench(n_steps=8, n_time=5, B=1):
     return speedup
 
 
+def decode_attention_bench(cache_lens=(1024, 2048), batches=(1, 4),
+                           n_time=5, window_rows=True):
+    """PR-5: packed-KV decode attention (the `vp_decode_attention`
+    kernel op) vs the legacy jnp dequant-whole-cache planes baseline.
+
+    Same float K/V, same attention output (parity asserted inline —
+    bit-identical on the ref backend, where both layouts dequantize to
+    the same reals and run the shared decode core); the rows time the
+    difference: the packed cache ships ONE word plane per element and
+    dequantizes through the offline whole-word LUT, while the baseline
+    unpacks the bit-packed index plane and walks the select cascade over
+    the ENTIRE Smax buffer every step.  The windowed rows additionally
+    exercise the O(window) slice path against the legacy whole-cache
+    mask.  Timing is interleaved per round (machine drift cancels).
+    Returns the minimum full-span speedup over the sweep.
+    """
+    from repro.configs.base import QuantConfig
+    from repro.kernels import ops as kops
+    from repro.kernels import substrate as ksub
+    from repro.models.attention import (
+        decode_attention, dequantize_kv, kv_cache_formats, quantize_kv,
+    )
+
+    q_cfg = QuantConfig(mode="none", quantize_kv_cache=True)
+    _, vp = kv_cache_formats(q_cfg)
+    KV, dh, G = 2, 64, 2
+    H = KV * G
+    ref_backend = ksub.resolve_backend(None) == "ref"
+
+    def _legacy_whole_cache(q, k_full, v_full, lens, window=None):
+        # The pre-PR-5 path verbatim: scores for ALL Smax positions.
+        B_, _, H_, dh_ = q.shape
+        smax = k_full.shape[1]
+        qr = q.reshape(B_, KV, H_ // KV, dh_) * dh_ ** -0.5
+        s = jnp.einsum("bkgd,bksd->bkgs", qr,
+                       k_full.transpose(0, 2, 1, 3))
+        pos = jnp.arange(smax)[None, :]
+        valid = pos < lens[:, None]
+        if window:
+            valid &= pos >= (lens[:, None] - window)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        out = jnp.einsum("bkgs,bksd->bkgd", p,
+                         v_full.transpose(0, 2, 1, 3))
+        return out.reshape(B_, 1, H_, dh_)
+
+    min_speedup = float("inf")
+    for B in batches:
+        for S in cache_lens:
+            key = jax.random.PRNGKey(29)
+            kk, kv_, kq = jax.random.split(key, 3)
+            k = jax.random.normal(kk, (B, S, KV, dh), jnp.float32) * 2
+            v = jax.random.normal(kv_, (B, S, KV, dh), jnp.float32)
+            q = jax.random.normal(kq, (B, 1, H, dh), jnp.float32)
+            lens = jnp.full((B,), S, jnp.int32)
+            w_k, s_k = quantize_kv(k, q_cfg)
+            w_v, s_v = quantize_kv(v, q_cfg)
+            m_k, i_k, ps_k = quantize_kv(k, q_cfg, layout="planes")
+            m_v, i_v, ps_v = quantize_kv(v, q_cfg, layout="planes")
+
+            kern = jax.jit(lambda q, lens: kops.vp_decode_attention(
+                q, w_k, w_v, s_k, s_v, lens, vp))
+            base = jax.jit(lambda q, lens: _legacy_whole_cache(
+                q,
+                dequantize_kv(m_k, i_k, ps_k, q_cfg, q.dtype),
+                dequantize_kv(m_v, i_v, ps_v, q_cfg, q.dtype),
+                lens))
+            o_kern = np.asarray(kern(q, lens))
+            o_base = np.asarray(base(q, lens))
+            if ref_backend:
+                assert (o_kern == o_base).all(), \
+                    "decode-attention parity violation (packed vs planes)"
+            else:
+                assert np.allclose(o_kern, o_base, rtol=1e-5, atol=1e-5)
+
+            def _time_pair(fns):
+                # warm compile + allocator, then interleaved min-of-n
+                best = {n: float("inf") for n in fns}
+                for f in fns.values():
+                    jax.block_until_ready(f(q, lens))
+                    jax.block_until_ready(f(q, lens))
+                for _ in range(n_time):
+                    for n, f in fns.items():
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(f(q, lens))
+                        best[n] = min(best[n], time.perf_counter() - t0)
+                return best
+
+            fns = {"kernel": kern, "jnp_baseline": base}
+            best = _time_pair(fns)
+            for n in fns:
+                emit(f"decode_attn_{n}_b{B}_s{S}", best[n] * 1e6,
+                     f"packed_bits={vp.storage_bits};KV{KV}xdh{dh}xH{H};"
+                     "full-span causal decode")
+            speedup = best["jnp_baseline"] / best["kernel"]
+            min_speedup = min(min_speedup, speedup)
+            emit(f"decode_attn_speedup_b{B}_s{S}", best["kernel"] * 1e6,
+                 f"kernel_vs_jnp_x{speedup:.2f};parity asserted"
+                 f"{' (bit-identical)' if ref_backend else ''}")
+
+            if window_rows and S >= max(cache_lens):
+                window = max(128, S // 8)
+                kern_w = jax.jit(lambda q, lens: kops.vp_decode_attention(
+                    q, w_k, w_v, s_k, s_v, lens, vp, window=window))
+                base_w = jax.jit(lambda q, lens: _legacy_whole_cache(
+                    q,
+                    dequantize_kv(m_k, i_k, ps_k, q_cfg, q.dtype),
+                    dequantize_kv(m_v, i_v, ps_v, q_cfg, q.dtype),
+                    lens, window=window))
+                assert np.allclose(np.asarray(kern_w(q, lens)),
+                                   np.asarray(base_w(q, lens)),
+                                   rtol=1e-5, atol=1e-5), \
+                    "windowed decode-attention parity violation"
+                bw = _time_pair({"kernel": kern_w, "jnp_baseline": base_w})
+                emit(f"decode_attn_window{window}_speedup_b{B}_s{S}",
+                     bw["kernel"] * 1e6,
+                     f"kernel_vs_jnp_x{bw['jnp_baseline']/bw['kernel']:.2f}"
+                     f";O(window) slice vs O(Smax) mask;parity asserted")
+    return min_speedup
+
+
 def cspade_tile_stats(ens):
     """Tile-level CSPADE muting on real beamspace stimuli (TPU adaptation).
 
@@ -565,6 +701,10 @@ def main() -> None:
         subcarrier_scaling()
         serve_decode_bench(B=1)   # single-stream skinny decode
         serve_decode_bench(B=4)   # batched decode (dequant amortizes)
+        min_x = decode_attention_bench()  # packed-KV cache attention
+        assert min_x > 1.0, \
+            f"packed-KV decode attention must beat the dequant-whole-" \
+            f"cache baseline at every swept (B, cache_len); got {min_x:.2f}x"
 
     if args.json:
         with open(args.json, "w") as f:

@@ -23,10 +23,14 @@ class QuantConfig:
     W: int = 12                    # FXP proxy grid width
     block: int = 256               # vp_block index granularity
     quantize_kv_cache: bool = False  # VP-quantized KV cache (decode lever)
+    kv_layout: str = "packed"      # VP KV-cache storage: "packed" words
+                                   # (kernel-consumed) | "planes" (legacy
+                                   # two-plane jnp-dequant golden baseline)
     act_mode: str = "none"         # activation quantization (none | vp)
 
     def __post_init__(self):
         assert self.mode in ("none", "fxp", "vp", "vp_block"), self.mode
+        assert self.kv_layout in ("packed", "planes"), self.kv_layout
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,10 +9,12 @@ interpret / CPU-ref backend dispatcher.
 from .ops import (
     vp_quant, vp_dequant, vp_matmul, block_vp_matmul, vp_quant_matmul,
     vp_dequant_matmul, vp_matmul_batched, vp_quant_matmul_batched,
+    vp_decode_attention, flash_prefill,
 )
 from . import autotune, ref, ops, substrate
 
 __all__ = ["vp_quant", "vp_dequant", "vp_matmul", "block_vp_matmul",
            "vp_quant_matmul", "vp_dequant_matmul",
            "vp_matmul_batched", "vp_quant_matmul_batched",
+           "vp_decode_attention", "flash_prefill",
            "autotune", "ref", "ops", "substrate"]

@@ -258,6 +258,60 @@ def skinny_candidates(M: int, K: int, N: int) -> Tuple[Blocks, ...]:
     return tuple(out)
 
 
+def attn_candidates(sq: int, sk: int) -> Tuple[Blocks, ...]:
+    """Candidate (bq, bkv, 1) chunkings for the attention kernels.
+
+    The attention grid tiles two sequence axes instead of (M, K, N): bq
+    chunks the query rows, bkv the key/value positions.  Decode is
+    skinny on the query side (sq = grouped heads per KV head), so the
+    interesting trade is the KV seq tile — bigger tiles amortize the
+    per-tile unpack/dequant of packed cache words, smaller tiles skip
+    more invalid work near the valid-length boundary.  The trailing 1
+    keeps the on-disk cache's 3-entry block format.
+    """
+    seen, out = set(), []
+    for bq in (128, 256):
+        for bk in (128, 256, 512):
+            c = (min(bq, _pow2_at_least(max(sq, 1))),
+                 min(bk, _pow2_at_least(max(sk, 1))), 1)
+            if c not in seen:
+                seen.add(c)
+                out.append(c)
+    return tuple(out)
+
+
+def resolve_attn_blocks(
+    kernel: str,
+    shape: Sequence[int],
+    formats: Sequence,
+    backend: str,
+    sq: int,
+    sk: int,
+    blocks: Optional[Blocks] = None,
+) -> Blocks:
+    """Block resolution for the attention kernels (decode + flash prefill).
+
+    Same policy as `resolve_blocks` — explicit blocks win, then a tuned
+    cache entry, then a shape-clamped heuristic — but the heuristic
+    clamps the (bq, bkv) seq chunks instead of (M, K, N) tiles.  `shape`
+    is the full cache key, INCLUDING the window/rolling attributes the
+    kernel specializes on ((B, Smax, KV, dh, window, rolling) for decode;
+    (B, H, KV, dh, Sq, Sk, window) for prefill): a tiling measured for
+    one masking regime must not leak to another, whose skipped-tile
+    pattern differs.
+    """
+    if blocks is not None:
+        return tuple(blocks)
+    cached = get_cached(make_key(kernel, shape, formats, backend))
+    if cached is not None:
+        return cached
+    bq = min(128, _pow2_at_least(max(sq, 1)))
+    bk = min(256, _pow2_at_least(max(sk, 1)))
+    if backend == "native":
+        bq, bk = max(bq, 8), max(bk, 128)
+    return (bq, bk, 1)
+
+
 def tune_serving_decode(
     kernel: str,
     K: int,

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.core.formats import FXPFormat, VPFormat
 from repro.core import packing as pk
 from . import autotune, ref, substrate
+from .vp_attention import flash_prefill_pallas, vp_decode_attention_pallas
 from .vp_quant import vp_quant_pallas, vp_quant_packed_pallas
 from .vp_dequant import vp_dequant_pallas, vp_dequant_packed_pallas
 from .vp_dequant_matmul import vp_dequant_matmul_pallas
@@ -424,6 +425,114 @@ def vp_quant_matmul_batched(
         interpret=(backend == "interpret"), blocks=blocks,
         out_dtype=out_dtype)
     return out[:, :M, :N]
+
+
+def vp_decode_attention(
+    q, k_w, v_w, k_s, v_s, lengths,
+    fmt: VPFormat,
+    window: Optional[int] = None,
+    rolling: bool = False,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+):
+    """Single-token decode attention over a PACKED VP KV cache.
+
+    q (B, 1, H, dh); k_w / v_w (B, Smax, KV, dh) packed VP words
+    (`core.packing`); k_s / v_s (B, Smax, 1, 1) per-position pow2 cache
+    scales; lengths (B,) valid cache lengths.  The cache words feed the
+    kernel directly — unpack + bit-assembled scale happen in VMEM, and
+    seq tiles entirely outside the valid span (past `lengths`, outside
+    the sliding `window`, or past the `rolling` ring's fill level) are
+    skipped, so decode work is O(cache_len), not O(Smax).  `blocks=None`
+    resolves the (bq, bkv, 1) chunking through the autotuner, keyed on
+    (B, Smax, KV, dh, window, rolling).
+    """
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        return ref.vp_decode_attention_ref(
+            q, k_w, v_w, k_s, v_s, lengths, fmt,
+            window=window, rolling=rolling)
+    B, _, H, dh = q.shape
+    Smax, KV = k_w.shape[1], k_w.shape[2]
+    G = H // KV
+    blocks = autotune.resolve_attn_blocks(
+        "vp_decode_attention",
+        (B, Smax, KV, dh, window or 0, int(rolling)), (fmt,), backend,
+        sq=G, sk=Smax, blocks=blocks)
+    bs = blocks[1]
+    ks, vs = k_s.reshape(B, Smax), v_s.reshape(B, Smax)
+    kw, vw = k_w, v_w
+    pad = (-Smax) % bs
+    if pad:
+        # The kernel masks padded positions (the real `Smax` rides the
+        # launch as the ring clamp), but re-padding four whole cache
+        # planes EVERY decode step is the O(Smax) copy this kernel
+        # exists to remove — prefer a smaller tile that divides the
+        # buffer (floor: the int8-plane sublane minimum on native).
+        floor = 32 if backend == "native" else 8
+        bs_div = bs
+        while Smax % bs_div and bs_div > floor:
+            bs_div //= 2
+        if Smax % bs_div == 0:
+            bs, pad = bs_div, 0
+    if pad:
+        kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, pad)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad)))
+    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    gp = max(G, 8) if backend == "native" else G
+    if gp != G:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, gp - G), (0, 0)))
+    out = vp_decode_attention_pallas(
+        qr, kw, vw, ks, vs, lengths.astype(jnp.int32), fmt,
+        window=window, rolling=rolling, bs=bs, smax=Smax,
+        interpret=(backend == "interpret"))
+    return out[:, :, :G].reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def flash_prefill(
+    q, k, v,
+    pattern: str = "causal",
+    window: Optional[int] = None,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+):
+    """Flash-attention prefill: q (B, Sq, H, dh) x k/v (B, Sk, KV, dh).
+
+    q-chunk x k-chunk online softmax in ONE pallas_call (scores never
+    materialize); causal/local tiles above the diagonal or outside the
+    window are skipped at tile granularity.  GQA rides the kernel index
+    maps (kv head = head // G).  `blocks=None` resolves the (bq, bk, 1)
+    chunking through the autotuner.
+    """
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        return ref.flash_prefill_ref(q, k, v, pattern=pattern,
+                                     window=window)
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if pattern in ("causal", "local"):
+        assert Sq == Sk, "causal/local prefill requires Sq == Sk"
+    blocks = autotune.resolve_attn_blocks(
+        "flash_prefill",
+        (B, H, KV, dh, Sq, Sk, window or 0), (), backend,
+        sq=Sq, sk=Sk, blocks=blocks)
+    bq, bk = blocks[0], blocks[1]
+    qt = q.transpose(0, 2, 1, 3) * jnp.asarray(dh ** -0.5, q.dtype)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_prefill_pallas(
+        qt, kt, vt, pattern=pattern, window=window, sk=Sk, g=G,
+        blocks=(bq, bk), interpret=(backend == "interpret"))
+    return out[:, :, :Sq].transpose(0, 2, 1, 3).astype(q.dtype)
 
 
 def block_vp_matmul(

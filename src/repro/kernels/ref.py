@@ -280,6 +280,123 @@ def vp_quant_matmul_batched_ref(
         a_act=a_act, b_act=b_act, tiles=tiles, out_dtype=out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# Attention oracles (decode over a VP cache + flash prefill)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _decode_attention_core(q, k_cache, v_cache, cache_len,
+                           window: Optional[int], rolling: bool):
+    """Masked single-token decode attention over a FLOAT cache (traced).
+
+    q (B, 1, H, dh), caches (B, Smax, KV, dh) -> (B, 1, H, dh).  This is
+    THE decode-attention math: `models.attention.decode_attention` and
+    the packed-cache oracle below both call it, so the packed-vs-planes
+    parity is bit-identical by construction (they differ only in the
+    dequant, which `core.packing` pins bit-for-bit).
+
+    When a non-rolling `window` bounds the valid span and the buffer is
+    statically larger, the cache is SLICED to the window before the
+    einsum — scores for positions the mask would zero anyway are never
+    computed, so decode work is O(window), not O(Smax).  Masked-out
+    entries contribute exactly 0 after the softmax's exp, so slicing
+    only drops exact zeros from the contractions.
+    """
+    B, _, H, dh = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    if not rolling and window and window < Smax:
+        start = jnp.clip(cache_len - window, 0, Smax - window)
+        slc = jax.vmap(functools.partial(
+            jax.lax.dynamic_slice_in_dim, slice_size=window, axis=0))
+        kc, vc = slc(k_cache, start), slc(v_cache, start)
+        pos = start[:, None] + jnp.arange(window)[None, :]
+    else:
+        kc, vc = k_cache, v_cache
+        pos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+    kr = kc.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vr = vc.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qr, kr)
+    if rolling:
+        valid = pos < jnp.minimum(cache_len, Smax)[:, None]
+    else:
+        valid = pos < cache_len[:, None]
+        if window:
+            valid &= pos >= (cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, vr)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "rolling"))
+def decode_attention_ref(q, k_cache, v_cache, cache_len,
+                         window: Optional[int] = None,
+                         rolling: bool = False):
+    """Jitted float decode-attention oracle (see `_decode_attention_core`)."""
+    return _decode_attention_core(q, k_cache, v_cache, cache_len,
+                                  window, rolling)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "window", "rolling"))
+def vp_decode_attention_ref(
+    q, k_w, v_w, k_s, v_s, lengths,
+    fmt: VPFormat,
+    window: Optional[int] = None,
+    rolling: bool = False,
+):
+    """Packed-KV decode oracle: dequant INSIDE the jit, then the shared
+    decode core.
+
+    k_w / v_w (B, Smax, KV, dh) packed VP words, k_s / v_s per-position
+    pow2 cache scales ((B, Smax) or (B, Smax, 1, 1)).  The dequant goes
+    through the offline whole-word LUT (`core.packing.dequant_words`) —
+    one gather per element instead of the planes path's index-unpack +
+    select cascade, which is where the ref-backend decode speedup comes
+    from — and mirrors the planes path's dtype hop (f32 dequant, scale,
+    cast to the model dtype) so parity is bit-identical on this backend.
+    """
+    if k_s.ndim == 2:
+        k_s = k_s[:, :, None, None]
+    if v_s.ndim == 2:
+        v_s = v_s[:, :, None, None]
+    kr = (dequant_words(k_w, fmt, jnp.float32) * k_s).astype(q.dtype)
+    vr = (dequant_words(v_w, fmt, jnp.float32) * v_s).astype(q.dtype)
+    return _decode_attention_core(q, kr, vr, lengths, window, rolling)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "window"))
+def flash_prefill_ref(q, k, v, pattern: str = "causal",
+                      window: Optional[int] = None):
+    """Unfused prefill-attention oracle: full (Sq, Sk) scores + mask.
+
+    q (B, Sq, H, dh), k/v (B, Sk, KV, dh) -> (B, Sq, H, dh).  O(S^2)
+    memory — the oracle the flash kernel (which never materializes the
+    scores) is tested against; `models.attention.flash_attention`'s
+    pair-scan is the bounded-memory production path off-TPU.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    kr = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, kr)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    if pattern in ("causal", "local"):
+        mask = k_pos <= q_pos
+        if pattern == "local" and window:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("a_fmt", "b_fmt", "bk", "out_dtype"))
 def block_vp_matmul_ref(

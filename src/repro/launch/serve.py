@@ -13,10 +13,17 @@ now exercise the same kernel substrate.
 
   --layout planes   legacy two-plane jnp-dequant serving (the golden
                     baseline the parity suite pins the kernel against)
-  --kv-quant        additionally VP-quantizes the KV cache
+  --kv-quant        additionally VP-quantizes the KV cache into PACKED
+                    words consumed by the `vp_decode_attention` kernel
+                    (unpack + pow2 scale in-tile, cache_len-aware tile
+                    skip — the whole-cache dequant is gone)
+  --kv-layout planes  legacy two-plane KV cache, dequantized whole in
+                    jnp every step (the golden packed-cache baseline)
   --tune-decode     run the M=1..B skinny-decode autotune profile over the
-                    model's weight panels before serving (persisted in the
-                    autotune cache, so later launches hit measured tilings)
+                    model's weight panels — and, with --kv-quant, the
+                    decode-attention cache geometries — before serving
+                    (persisted in the autotune cache, so later launches
+                    hit measured tilings)
   --json F          write a serving report (tokens/sec, packed bytes) to F
   --smoke           reduced config; also ASSERTS finite logits end to end
 """
@@ -74,12 +81,37 @@ def _weight_panels(params):
     return sorted(panels)
 
 
-def tune_decode_profile(params, cfg, batch: int, seed: int = 0):
-    """Tune `vp_dequant_matmul` for every weight panel at M = 1..batch.
+def _attn_cache_geometries(cfg, max_len: int):
+    """Distinct decode-attention cache geometries of the model's layer
+    plan: (buf_len, window, rolling) per attention pattern — exactly the
+    shapes `attn_block` will launch `vp_decode_attention` with."""
+    from repro.models.model import layer_groups
 
-    The persisted entries are keyed on (kernel, (M, K, N), format,
-    backend), so any serving process with the same model dims launches
-    the measured-best tiling from `resolve_blocks` with zero overhead.
+    shapes = set()
+    for group in layer_groups(cfg):
+        for pattern in group.patterns:
+            if pattern in ("mamba", "rwkv"):
+                continue
+            window = (cfg.sliding_window if pattern in ("swa", "moe_swa")
+                      else (cfg.local_window if pattern == "local"
+                            else None))
+            buf_len = min(max_len, window) if window else max_len
+            rolling = window is not None and buf_len <= window
+            shapes.add((buf_len, window or 0, rolling))
+    if cfg.family == "encdec":
+        shapes.add((max_len, 0, False))
+    return sorted(shapes)
+
+
+def tune_decode_profile(params, cfg, batch: int, max_len: int = 0,
+                        seed: int = 0):
+    """Tune the serving kernels this process will launch at decode.
+
+    Weight panels: `vp_dequant_matmul` at every M = 1..batch (persisted
+    per (M, K, N)).  With a VP-quantized packed KV cache, ALSO profiles
+    `vp_decode_attention` over the model's cache geometries (buf_len,
+    window, rolling) at batch `batch` — the attention tile cache key
+    includes the masking regime, so each geometry tunes separately.
     """
     from repro.kernels import autotune, ops, substrate
     from repro.core.packing import storage_dtype
@@ -109,6 +141,33 @@ def tune_decode_profile(params, cfg, batch: int, seed: int = 0):
         profile[(K, N)] = autotune.tune_serving_decode(
             "vp_dequant_matmul", K, N, (vp,), backend, bench,
             batch_sizes=sizes)
+    if cfg.quant.quantize_kv_cache and cfg.quant.kv_layout == "packed" \
+            and max_len:
+        from repro.models.attention import kv_cache_formats
+
+        _, kv_vp = kv_cache_formats(cfg.quant)
+        KV, dh, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+        for buf_len, window, rolling in _attn_cache_geometries(cfg,
+                                                               max_len):
+            kw = jax.random.randint(
+                key, (batch, buf_len, KV, dh), -8, 8
+            ).astype(storage_dtype(kv_vp))
+            ks = jnp.ones((batch, buf_len, 1, 1), jnp.float32)
+            q = jax.random.normal(key, (batch, 1, H, dh), jnp.float32)
+            lens = jnp.full((batch,), buf_len, jnp.int32)
+            win = window or None
+
+            def bench_attn(blocks, kw=kw, ks=ks, q=q, lens=lens, win=win,
+                           rolling=rolling):
+                jax.block_until_ready(ops.vp_decode_attention(
+                    q, kw, kw, ks, ks, lens, kv_vp, window=win,
+                    rolling=rolling, blocks=blocks))
+
+            shape = (batch, buf_len, KV, dh, window, int(rolling))
+            profile[("attn",) + shape] = autotune.tune(
+                "vp_decode_attention", shape, (kv_vp,), backend,
+                bench_attn,
+                candidates=autotune.attn_candidates(H // KV, buf_len))
     return profile
 
 
@@ -137,6 +196,11 @@ def main():
                          "(non-tileable weights fall back to per-element "
                          "packed VP)")
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--kv-layout", default="packed",
+                    choices=["packed", "planes"],
+                    help="VP KV-cache storage: packed kernel words "
+                         "(default) or the legacy two-plane jnp-dequant "
+                         "baseline")
     ap.add_argument("--tune-decode", action="store_true",
                     help="autotune the serving kernel at M=1..batch first")
     ap.add_argument("--json", default=None, metavar="FILE",
@@ -146,14 +210,22 @@ def main():
 
     quant = QuantConfig(mode=args.quant, M=args.M, E=args.E,
                         block=args.block,
-                        quantize_kv_cache=args.kv_quant)
+                        quantize_kv_cache=args.kv_quant,
+                        kv_layout=args.kv_layout)
     cfg = (registry.get_smoke_config(args.arch, quant) if args.smoke
            else registry.get_config(args.arch, quant))
     key = jax.random.PRNGKey(0)
     params = init_params(key, cfg)
     report = {"arch": args.arch, "quant": args.quant, "layout": args.layout,
+              "kv_quant": bool(args.kv_quant), "kv_layout": args.kv_layout,
               "smoke": bool(args.smoke), "batch": args.batch,
               "prompt_len": args.prompt_len, "gen": args.gen}
+    if args.kv_quant and args.kv_layout == "packed":
+        from repro.models.attention import kv_cache_formats
+        _, kv_vp = kv_cache_formats(cfg.quant)
+        print(f"[serve] packed VP KV cache: {kv_vp.storage_bits} "
+              f"bits/element ({kv_vp.M}+{kv_vp.E} info bits), "
+              "kernel-backed decode attention")
     if args.quant != "none":
         params = quantize_params(params, cfg, layout=args.layout)
         qbytes = _quantized_bytes(params)
@@ -164,14 +236,23 @@ def main():
                   f"({vp.storage_bits} bits/param, kernel-backed qdot)")
         else:
             print(f"[serve] quantized planes: {qbytes/1e6:.2f} MB")
-        if args.tune_decode and args.quant == "vp" \
-                and args.layout == "packed":
-            t0 = time.time()
-            prof = tune_decode_profile(params, cfg, args.batch)
-            if prof:
-                print(f"[serve] decode autotune profile: "
-                      f"{sum(len(v) for v in prof.values())} entries over "
-                      f"{len(prof)} weight panels in {time.time()-t0:.1f}s")
+    # Tunable decode surfaces: packed-word weight panels (vp + packed
+    # layout) and/or the packed KV decode-attention cache — the latter is
+    # independent of the weight quantization mode.
+    tunable = (args.quant == "vp" and args.layout == "packed") or \
+        (args.kv_quant and args.kv_layout == "packed")
+    if args.tune_decode and tunable:
+        t0 = time.time()
+        prof = tune_decode_profile(
+            params, cfg, args.batch,
+            max_len=args.prompt_len + args.gen)
+        if prof:
+            n_entries = sum(
+                len(v) if isinstance(v, dict) else 1
+                for v in prof.values())
+            print(f"[serve] decode autotune profile: "
+                  f"{n_entries} entries over "
+                  f"{len(prof)} shapes in {time.time()-t0:.1f}s")
 
     B = args.batch
     prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)

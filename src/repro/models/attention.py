@@ -20,18 +20,26 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.core import FXPFormat, VPFormat, default_vp_format
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels import substrate as ksub
+from repro.kernels.autotune import _pow2_at_least
 from .layers import qdot, rms_norm, rope
 
 NEG_INF = -1e30
 
 
-def _pick_chunk(s: int, target: int = 512) -> int:
-    """Largest divisor of s that is <= target."""
-    c = min(target, s)
-    while s % c:
-        c -= 1
-    return c
+def _chunk_and_pad(s: int, target: int = 512):
+    """Chunk size and padded length for a sequence of length s.
+
+    The chunk is the largest power of two <= target that is needed to
+    cover s; s pads up to the next chunk multiple (pad < chunk, masked
+    in the kernel).  The old policy demanded an exact DIVISOR of s, so a
+    prime length (e.g. 509) degraded to chunk=1 and a scan over s^2
+    singleton pairs.
+    """
+    c = min(target, _pow2_at_least(max(s, 1)))
+    return c, s + (-s) % c
 
 
 def _chunk_pairs(n_q: int, n_k: int, pattern: str, window_chunks: int):
@@ -64,19 +72,30 @@ def flash_attention(
     B, Sq, H, dh = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
+    if scale is None and ksub.resolve_backend(None) == "native":
+        # Kernel backend: one fused flash pallas_call (q-chunk x k-chunk
+        # online softmax, diagonal/window tiles skipped) replaces the
+        # lax.scan pair-walk.
+        return kops.flash_prefill(q, k, v, pattern=pattern, window=window)
     scale = scale if scale is not None else dh ** -0.5
-    c = _pick_chunk(Sq, chunk)
-    ck = _pick_chunk(Sk, chunk)
+    c, sqp = _chunk_and_pad(Sq, chunk)
+    ck, skp = _chunk_and_pad(Sk, chunk)
     if pattern in ("causal", "local"):
         assert Sq == Sk
-        ck = c
-    nq, nk = Sq // c, Sk // ck
-    wc = max(1, (window or Sq) // c) if pattern == "local" else nk
+        ck, skp = c, sqp
+    nq, nk = sqp // c, skp // ck
+    wc = max(1, (window or sqp) // c) if pattern == "local" else nk
     pairs = _chunk_pairs(nq, nk, pattern, wc)
     pair_arr = jnp.asarray(pairs, jnp.int32)  # (P, 2)
 
+    if sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, sqp - Sq), (0, 0), (0, 0)))
+    if skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, skp - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skp - Sk), (0, 0), (0, 0)))
+
     # Layout: (B, KV, G, nq, c, dh) for q; (B, KV, nk, ck, dh) for k/v.
-    qr = q.reshape(B, Sq, KV, G, dh).transpose(0, 2, 3, 1, 4)
+    qr = q.reshape(B, sqp, KV, G, dh).transpose(0, 2, 3, 1, 4)
     qr = qr.reshape(B, KV, G, nq, c, dh) * scale
     kr = k.transpose(0, 2, 1, 3).reshape(B, KV, nk, ck, dh)
     vr = v.transpose(0, 2, 1, 3).reshape(B, KV, nk, ck, dh)
@@ -95,13 +114,17 @@ def flash_attention(
         s = jnp.einsum(
             "bkgqd,bkcd->bkgqc", qb, kb,
             preferred_element_type=jnp.float32)
+        q_pos = qi * c + q_off[:, None]
+        k_pos = ki * ck + k_off[None, :]
         if pattern in ("causal", "local"):
-            q_pos = qi * c + q_off[:, None]
-            k_pos = ki * ck + k_off[None, :]
             mask = k_pos <= q_pos
             if pattern == "local" and window:
                 mask &= q_pos - k_pos < window
+            if skp != Sk:
+                mask &= k_pos < Sk
             s = jnp.where(mask, s, NEG_INF)
+        elif skp != Sk:
+            s = jnp.where(k_pos < Sk, s, NEG_INF)
         # online softmax update for q chunk qi
         m_old = jax.lax.dynamic_index_in_dim(m, qi, 3, keepdims=False)
         l_old = jax.lax.dynamic_index_in_dim(l, qi, 3, keepdims=False)
@@ -126,8 +149,8 @@ def flash_attention(
     )
     (m, l, acc), _ = jax.lax.scan(step, init, pair_arr)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    out = out.reshape(B, KV, G, Sq, dh).transpose(0, 3, 1, 2, 4)
-    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+    out = out.reshape(B, KV, G, sqp, dh).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, sqp, H, dh)[:, :Sq].astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -140,31 +163,56 @@ def kv_cache_formats(q: QuantConfig):
     return fxp, vp
 
 
-def quantize_kv(x, q: QuantConfig):
-    """bf16 KV block -> (int8 significand, PACKED uint8 index) planes +
-    pow2 scale: 8 + E bits/element of cache traffic instead of 16.
-
-    The E-bit exponent indices pack 8//E per byte along the head dim;
-    per-position pow2 scale keeps VP exactness."""
-    from repro.core.vp_tensor import pack_indices
-
-    fxp, vp = kv_cache_formats(q)
+def _kv_scale(x):
+    """Per-position pow2 scale: smallest 2^n >= max|x| over (KV, dh)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1),
                    keepdims=True)
-    s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
-    m, i = kref.vp_quant_ref(x.astype(jnp.float32) / s, fxp, vp)
+    return jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
+
+
+def quantize_kv(x, q: QuantConfig, layout: str = "packed"):
+    """bf16 KV block (B, S, KV, dh) -> VP storage + per-position pow2
+    scale.
+
+    layout "packed" (default): ONE packed VP word per element
+    (`core.packing`: sign + significand + exponent index,
+    `vp.storage_bits` bits) -> (w, s).  This is the layout the
+    decode-attention kernel consumes directly — no per-step index
+    unpacking, no two-plane HBM reads.
+    layout "planes": the legacy (int8 significand, bit-packed uint8
+    index) planes -> (m, i, s), kept as the golden jnp oracle the
+    packed path is pinned against.
+    """
+    fxp, vp = kv_cache_formats(q)
+    s = _kv_scale(x)
+    xn = x.astype(jnp.float32) / s
+    if layout == "packed":
+        return kref.vp_quant_packed_ref(xn, fxp, vp), s.astype(jnp.float32)
+    from repro.core.vp_tensor import pack_indices
+
+    m, i = kref.vp_quant_ref(xn, fxp, vp)
     if vp.E and x.shape[-1] % (8 // vp.E) == 0:
         i = pack_indices(i, vp.E)
     return m, i, s.astype(jnp.float32)
 
 
 def dequantize_kv(m, i, s, q: QuantConfig, dtype):
+    """Planes cache -> reals (the legacy whole-cache jnp dequant)."""
     from repro.core.vp_tensor import unpack_indices
 
     _, vp = kv_cache_formats(q)
     if i.shape[-1] != m.shape[-1]:
         i = unpack_indices(i, vp.E, m.shape[-1])
     return (kref.vp_dequant_ref(m, i, vp, jnp.float32) * s).astype(dtype)
+
+
+def dequantize_kv_packed(w, s, q: QuantConfig, dtype):
+    """Packed-word cache -> reals (offline whole-word LUT, bit-identical
+    to `dequantize_kv` on the planes it packs)."""
+    from repro.core.packing import dequant_words
+
+    _, vp = kv_cache_formats(q)
+    return (dequant_words(w, vp, jnp.float32) * s).astype(dtype)
 
 
 def decode_attention(
@@ -177,30 +225,25 @@ def decode_attention(
     Masks positions >= cache_len (and outside the sliding window if given).
     `rolling`: the buffer IS the window (SWA ring buffer) — every slot
     written so far is valid, no window masking by absolute position.
+    When a non-rolling `window` bounds the valid span and Smax is
+    statically larger, the cache is sliced to the window before the
+    einsum (O(window) scores instead of O(Smax) — see
+    `kernels.ref._decode_attention_core`, the shared implementation).
     """
-    B, _, H, dh = q.shape
-    Smax, KV = k_cache.shape[1], k_cache.shape[2]
-    G = H // KV
-    qr = q.reshape(B, KV, G, dh).astype(jnp.float32) * dh ** -0.5
-    kr = k_cache.transpose(0, 2, 1, 3).astype(jnp.float32)
-    vr = v_cache.transpose(0, 2, 1, 3).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bksd->bkgs", qr, kr)
-    pos = jnp.arange(Smax)[None, :]
-    if rolling:
-        valid = pos < jnp.minimum(cache_len, Smax)[:, None]
-    else:
-        valid = pos < cache_len[:, None]
-        if window:
-            valid &= pos >= (cache_len[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bksd->bkgd", p, vr)
-    return out.reshape(B, 1, H, dh).astype(q.dtype)
+    return kref.decode_attention_ref(q, k_cache, v_cache, cache_len,
+                                     window=window, rolling=rolling)
 
 
 # ---------------------------------------------------------------------------
 # Full attention block (projections + norms + rope + flash/decode)
 # ---------------------------------------------------------------------------
+
+def _cache_buf(cache: dict):
+    """The key buffer of any cache layout (float / planes / packed)."""
+    for key in ("k", "k_m", "k_w"):
+        if key in cache:
+            return cache[key]
+    raise KeyError(f"unrecognized KV cache layout: {sorted(cache)}")
 
 def attn_block(
     x, params, cfg: ModelConfig,
@@ -213,7 +256,9 @@ def attn_block(
 ):
     """Self/cross attention block.
 
-    cache: {"k": (B, Smax, KV, dh)[ or VP planes], "v": ..., "len": (B,)}
+    cache: {"k": (B, Smax, KV, dh) floats, "v": ..., "len": (B,)} — or
+    the VP-quantized layouts: packed words {"k_w", "k_s", "v_w", "v_s"}
+    (kernel-consumed, default) / legacy planes {"k_m", "k_i", "k_s", ...}
     -> returns (out, new_cache).  kv_override supplies precomputed
     encoder K/V for cross-attention.
     """
@@ -250,7 +295,7 @@ def attn_block(
         # PREFILL: full causal pass over the prompt, then write all S
         # positions into the cache in one shot.
         S = x.shape[1]
-        smax = (cache["k"] if "k" in cache else cache["k_m"]).shape[1]
+        smax = _cache_buf(cache).shape[1]
         out = flash_attention(qp, kp, vp_, pattern=pattern, window=window)
         kw, vw = kp, vp_
         if S > smax:  # ring buffer shorter than prompt: keep the tail,
@@ -262,9 +307,14 @@ def attn_block(
         if pad:
             kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
             vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        if "k_m" in cache:
-            m_k, i_k, s_k = quantize_kv(kw, q_cfg)
-            m_v, i_v, s_v = quantize_kv(vw, q_cfg)
+        if "k_w" in cache:  # packed-word VP cache (kernel layout)
+            w_k, s_k = quantize_kv(kw, q_cfg)
+            w_v, s_v = quantize_kv(vw, q_cfg)
+            new_cache = dict(k_w=w_k, k_s=s_k, v_w=w_v, v_s=s_v,
+                             len=cache["len"] + S)
+        elif "k_m" in cache:
+            m_k, i_k, s_k = quantize_kv(kw, q_cfg, layout="planes")
+            m_v, i_v, s_v = quantize_kv(vw, q_cfg, layout="planes")
             new_cache = dict(
                 k_m=m_k, k_i=i_k, k_s=s_k, v_m=m_v, v_i=i_v, v_s=s_v,
                 len=cache["len"] + S)
@@ -277,37 +327,56 @@ def attn_block(
     if cache is not None and kv_override is None:
         # Decode: append this step's K/V.  A buffer no longer than the
         # sliding window acts as a ring buffer (long-context SWA decode).
-        smax = (cache["k"] if "k" in cache else cache["k_m"]).shape[1]
+        smax = _cache_buf(cache).shape[1]
         rolling = window is not None and smax <= window
         idx = cache["len"]  # (B,)
         widx = idx % smax if rolling else idx
         upd = lambda buf, val: jax.vmap(
             lambda b, v, j: jax.lax.dynamic_update_slice_in_dim(
                 b, v, j, axis=0))(buf, val, widx)
-        if "k_m" in cache:  # VP-quantized cache
-            m_k, i_k, s_k = quantize_kv(kp, q_cfg)
-            m_v, i_v, s_v = quantize_kv(vp_, q_cfg)
+        if "k_w" in cache:
+            # Packed-word VP cache: the words go straight to the
+            # decode-attention kernel op — unpack + bit-assembled pow2
+            # scale happen in-tile, and seq tiles outside the valid span
+            # are skipped.  The whole cache is never dequantized in XLA.
+            w_k, s_k = quantize_kv(kp, q_cfg)
+            w_v, s_v = quantize_kv(vp_, q_cfg)
             new_cache = dict(
-                k_m=upd(cache["k_m"], m_k), k_i=upd(cache["k_i"], i_k),
-                k_s=upd(cache["k_s"], s_k),
-                v_m=upd(cache["v_m"], m_v), v_i=upd(cache["v_i"], i_v),
-                v_s=upd(cache["v_s"], s_v),
+                k_w=upd(cache["k_w"], w_k), k_s=upd(cache["k_s"], s_k),
+                v_w=upd(cache["v_w"], w_v), v_s=upd(cache["v_s"], s_v),
                 len=idx + kp.shape[1],
             )
-            k_full = dequantize_kv(
-                new_cache["k_m"], new_cache["k_i"], new_cache["k_s"],
-                q_cfg, kp.dtype)
-            v_full = dequantize_kv(
-                new_cache["v_m"], new_cache["v_i"], new_cache["v_s"],
-                q_cfg, vp_.dtype)
+            _, vp_fmt = kv_cache_formats(q_cfg)
+            out = kops.vp_decode_attention(
+                qp, new_cache["k_w"], new_cache["v_w"],
+                new_cache["k_s"], new_cache["v_s"], new_cache["len"],
+                vp_fmt, window=window, rolling=rolling)
         else:
-            new_cache = dict(
-                k=upd(cache["k"], kp), v=upd(cache["v"], vp_),
-                len=idx + kp.shape[1],
-            )
-            k_full, v_full = new_cache["k"], new_cache["v"]
-        out = decode_attention(
-            qp, k_full, v_full, new_cache["len"], window, rolling=rolling)
+            if "k_m" in cache:  # legacy planes VP cache (golden baseline)
+                m_k, i_k, s_k = quantize_kv(kp, q_cfg, layout="planes")
+                m_v, i_v, s_v = quantize_kv(vp_, q_cfg, layout="planes")
+                new_cache = dict(
+                    k_m=upd(cache["k_m"], m_k), k_i=upd(cache["k_i"], i_k),
+                    k_s=upd(cache["k_s"], s_k),
+                    v_m=upd(cache["v_m"], m_v), v_i=upd(cache["v_i"], i_v),
+                    v_s=upd(cache["v_s"], s_v),
+                    len=idx + kp.shape[1],
+                )
+                k_full = dequantize_kv(
+                    new_cache["k_m"], new_cache["k_i"], new_cache["k_s"],
+                    q_cfg, kp.dtype)
+                v_full = dequantize_kv(
+                    new_cache["v_m"], new_cache["v_i"], new_cache["v_s"],
+                    q_cfg, vp_.dtype)
+            else:
+                new_cache = dict(
+                    k=upd(cache["k"], kp), v=upd(cache["v"], vp_),
+                    len=idx + kp.shape[1],
+                )
+                k_full, v_full = new_cache["k"], new_cache["v"]
+            out = decode_attention(
+                qp, k_full, v_full, new_cache["len"], window,
+                rolling=rolling)
     elif kv_override is not None:
         if qp.shape[1] == 1:
             # Cross-attention during decode: full-length source.

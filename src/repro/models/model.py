@@ -572,6 +572,22 @@ def _attn_cache(cfg: ModelConfig, reps, B, max_len, dtype, window=None):
     KV, dh = cfg.n_kv_heads, cfg.head_dim
     buf_len = min(max_len, window) if window else max_len
     if cfg.quant.quantize_kv_cache:
+        if cfg.quant.kv_layout == "packed":
+            # ONE packed VP word per element (`core.packing`), consumed
+            # directly by the decode-attention kernel — no per-step
+            # index unpacking, no two-plane reads.
+            from repro.core.packing import storage_dtype
+            from .attention import kv_cache_formats
+
+            _, vp = kv_cache_formats(cfg.quant)
+            wdt = storage_dtype(vp)
+            return dict(
+                k_w=jnp.zeros((reps, B, buf_len, KV, dh), wdt),
+                k_s=jnp.zeros((reps, B, buf_len, 1, 1), jnp.float32),
+                v_w=jnp.zeros((reps, B, buf_len, KV, dh), wdt),
+                v_s=jnp.zeros((reps, B, buf_len, 1, 1), jnp.float32),
+                len=jnp.zeros((reps, B), jnp.int32),
+            )
         E = cfg.quant.E
         per = 8 // E if E else 1
         dh_i = dh // per if (E and dh % per == 0) else dh
@@ -633,10 +649,10 @@ def decode_step(params, token, caches, cfg: ModelConfig,
     B = token.shape[0]
     x = embed_lookup(token, params["embed"], cfg.quant).astype(dtype)
     if cfg.family == "encdec":
+        from .attention import _cache_buf
         self_c = caches[0]["self"]
         pos_len = self_c["len"][0]                       # (B,)
-        buf = self_c["k"] if "k" in self_c else self_c["k_m"]
-        max_pos = buf.shape[2]
+        max_pos = _cache_buf(self_c).shape[2]
         sin = sinusoid_pos(max_pos, cfg.d_model, dtype)  # (Smax, d)
         x = x + jnp.take(sin, jnp.clip(pos_len, 0, max_pos - 1),
                          axis=0)[:, None]
