@@ -1,0 +1,159 @@
+"""Append-only benchmark trajectory across PRs.
+
+Each PR commits a point-in-time `BENCH_pr{N}.json` (the `--json` output
+of `benchmarks.run`).  Those are snapshots; comparing two of them means
+opening both by hand.  This module folds them into ONE committed
+append-only ledger, `BENCH_TRAJECTORY.json`, so a perf regression shows
+up as a readable per-metric time series instead of an archaeology dig:
+
+    python -m benchmarks.trajectory append BENCH_pr6.json --label pr6
+    python -m benchmarks.trajectory summarize
+    python -m benchmarks.trajectory summarize --metric serve_decode
+
+Rules of the ledger:
+
+  * append-only — `append` refuses to overwrite or reorder; a label that
+    already exists is an error (re-running a PR's benchmarks means a new
+    label, e.g. `pr6b`, never silent replacement of committed history).
+  * each entry is the FULL `rows` list of one `benchmarks.run` report,
+    tagged with its label and source filename — no lossy distillation at
+    append time; `summarize` does the distilling at read time.
+
+`summarize` prints one line per metric: the per-label `us_per_call`
+series and the last entry's `derived` payload (the paper-facing
+quantity — NMSE gaps, BER, speedups).  Timings committed from different
+machines are not comparable in absolute terms; the trajectory is for
+spotting structural cliffs (a metric that doubles while its neighbours
+hold) and for tracking the derived quantities, which ARE
+machine-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_TRAJECTORY.json")
+
+
+def load(path: str = DEFAULT_PATH) -> Dict:
+    if not os.path.exists(path):
+        return {"entries": []}
+    with open(path, encoding="utf-8") as f:
+        traj = json.load(f)
+    if "entries" not in traj or not isinstance(traj["entries"], list):
+        raise ValueError(f"{path}: not a trajectory file "
+                         f"(missing 'entries' list)")
+    return traj
+
+
+def append_report(traj: Dict, label: str, report: Dict,
+                  source: str = "") -> Dict:
+    """Append one benchmarks.run report under `label` (must be new)."""
+    if not label:
+        raise ValueError("empty trajectory label")
+    taken = [e["label"] for e in traj["entries"]]
+    if label in taken:
+        raise ValueError(
+            f"label {label!r} already in trajectory ({taken}); the "
+            f"ledger is append-only — pick a fresh label instead of "
+            f"rewriting committed history")
+    rows = report.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError(f"report has no 'rows' (keys: {list(report)})")
+    traj["entries"].append(
+        {"label": label, "source": source, "rows": rows})
+    return traj
+
+
+def save(traj: Dict, path: str = DEFAULT_PATH) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(traj, f, indent=1)
+        f.write("\n")
+
+
+def metric_series(traj: Dict, metric: Optional[str] = None) -> List[Dict]:
+    """Per-metric time series across entries, insertion-ordered.
+
+    Returns [{name, series: [(label, us_per_call)...], derived}] where
+    `derived` is the most recent entry's derived payload.  `metric`
+    filters by substring.
+    """
+    order: List[str] = []
+    by_name: Dict[str, Dict] = {}
+    for entry in traj["entries"]:
+        for row in entry["rows"]:
+            name = row["name"]
+            if metric and metric not in name:
+                continue
+            if name not in by_name:
+                order.append(name)
+                by_name[name] = {"name": name, "series": [],
+                                 "derived": ""}
+            by_name[name]["series"].append(
+                (entry["label"], row.get("us_per_call")))
+            if row.get("derived"):
+                by_name[name]["derived"] = row["derived"]
+    return [by_name[n] for n in order]
+
+
+def _fmt_us(us) -> str:
+    if us is None:
+        return "-"
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.0f}us"
+
+
+def summarize(traj: Dict, metric: Optional[str] = None) -> str:
+    labels = [e["label"] for e in traj["entries"]]
+    lines = [f"trajectory: {len(labels)} entries ({', '.join(labels)})"]
+    for m in metric_series(traj, metric):
+        pts = " -> ".join(
+            f"{lbl}:{_fmt_us(us)}" for lbl, us in m["series"])
+        lines.append(f"{m['name']:44s} {pts}")
+        if m["derived"]:
+            lines.append(f"{'':44s}   last derived: {m['derived']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m benchmarks.trajectory",
+        description="append-only cross-PR benchmark ledger")
+    p.add_argument("--path", default=DEFAULT_PATH,
+                   help="trajectory file (default: BENCH_TRAJECTORY.json "
+                        "at the repo root)")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    ap = sub.add_parser("append",
+                        help="append one benchmarks.run --json report")
+    ap.add_argument("report", help="BENCH_pr{N}.json to append")
+    ap.add_argument("--label", required=True,
+                    help="unique entry label, e.g. pr6")
+    sp = sub.add_parser("summarize", help="print per-metric series")
+    sp.add_argument("--metric", default=None,
+                    help="substring filter on metric names")
+    args = p.parse_args(argv)
+
+    traj = load(args.path)
+    if args.cmd == "append":
+        with open(args.report, encoding="utf-8") as f:
+            report = json.load(f)
+        append_report(traj, args.label, report,
+                      source=os.path.basename(args.report))
+        save(traj, args.path)
+        print(f"appended {args.label!r} "
+              f"({len(report['rows'])} rows) -> {args.path}")
+    else:
+        print(summarize(traj, args.metric))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Static contract checking for the VP kernel stack.
+
+The paper's value proposition is a set of bit-level invariants — an M-bit
+two's-complement significand, an E-bit index into a descending exponent
+list, products that must fit the accumulator without wraparound (Sec. II /
+Table I) — that the rest of this repo enforces only dynamically, by
+golden-parity tests on the shapes we happened to test.  This package
+proves them statically:
+
+  bitwidth    interval / bit-growth abstract interpretation over
+              VPFormat / FXPFormat: quantize -> pack -> unpack ->
+              multiply -> K-dim accumulate, with max-safe-K certificates
+              per (format pair, accumulator dtype)
+  contracts   the fail-fast layer `kernels/ops.py` calls at op
+              construction (cached, raises VPContractError with the
+              analyzer's explanation instead of silently corrupting)
+  vmem        a per-kernel VMEM footprint model checked against the TPU
+              budget; `kernels/autotune.py` uses it to prune infeasible
+              candidate tilings BEFORE timing them
+  jaxpr_lint  trace registered kernel ops and model forwards and lint the
+              jaxprs for hot-path hazards (f64 creep, full-weight f32
+              materialization on a packed path, O(vocab)/step gathers)
+  srclint     AST-level source lint (unused imports, bare asserts
+              guarding runtime invariants in launch code)
+  rules       the rule registry + findings baseline behind
+              `python -m repro.analysis`
+
+Import discipline: `bitwidth` / `contracts` / `vmem` depend only on
+`repro.core` so `repro.kernels` can import them without cycles;
+`jaxpr_lint` (which imports kernels and models) is only pulled in by the
+CLI / `rules` at run time.
+"""
+from .bitwidth import (  # noqa: F401
+    Interval,
+    MatmulProof,
+    analyze_matmul,
+    significand_interval,
+    product_interval,
+    max_safe_k,
+    check_pack_fields,
+    check_scale_exponents,
+    check_quantize_shifts,
+)
+from .contracts import (  # noqa: F401
+    VPContractError,
+    require_format_serviceable,
+    require_quant_safe,
+    require_int_accum_safe,
+)
+from .vmem import (  # noqa: F401
+    vmem_budget_bytes,
+    kernel_vmem_bytes,
+    vmem_feasible,
+)
+from .rules import Finding, Severity  # noqa: F401

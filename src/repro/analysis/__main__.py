@@ -1,0 +1,106 @@
+"""`python -m repro.analysis`: run every static check, gate on baseline.
+
+Exit status 0 when every error/warn finding is covered by the committed
+baseline (`ANALYSIS_BASELINE.json`); 1 otherwise.  Info findings (f32
+exactness horizons) are reported but never fatal.
+
+  python -m repro.analysis                     # full run (all archs)
+  python -m repro.analysis --archs llama3-8b   # one model's traces
+  python -m repro.analysis --no-models         # skip model tracing
+  python -m repro.analysis --update-baseline   # accept current findings
+  python -m repro.analysis --json out.json     # machine-readable report
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import bitwidth, rules
+
+
+def _print_safe_k_table() -> None:
+    pairs, _, depth = rules.analysis_formats()
+    print(f"\nMax safe accumulation depth K per format pair "
+          f"(block-VP int32 tile depth = {depth}):")
+    print(f"  {'pair':18s} {'a':16s} {'b':18s} "
+          f"{'exact-f32 K':>12s} {'int32 K':>12s}")
+    for row in bitwidth.safe_k_table(pairs):
+        print(f"  {row['pair']:18s} {row['a']:16s} {row['b']:18s} "
+              f"{row['max_safe_k_float32']:>12d} "
+              f"{row['max_safe_k_int32']:>12d}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checker for the VP kernel stack")
+    p.add_argument("--archs", default=None,
+                   help="comma-separated arch subset to trace "
+                        "(default: all)")
+    p.add_argument("--no-models", action="store_true",
+                   help="skip the model-zoo jaxpr traces")
+    p.add_argument("--baseline", default=rules.default_baseline_path())
+    p.add_argument("--update-baseline", action="store_true",
+                   help="write the current error/warn findings as the "
+                        "accepted baseline")
+    p.add_argument("--json", dest="json_out", default=None,
+                   help="write the full findings list as JSON")
+    args = p.parse_args(argv)
+
+    archs = [a for a in args.archs.split(",") if a] if args.archs else None
+    findings = rules.run_all(archs=archs, models=not args.no_models)
+
+    by_sev = {"error": [], "warn": [], "info": []}
+    for f in findings:
+        by_sev[f.severity].append(f)
+    for sev in ("error", "warn", "info"):
+        for f in by_sev[sev]:
+            print(f)
+    _print_safe_k_table()
+
+    if args.json_out:
+        with open(args.json_out, "w") as fp:
+            json.dump([dataclass_dict(f) for f in findings], fp, indent=1)
+
+    if args.update_baseline:
+        accepted = sorted({f.key for f in findings
+                           if f.severity != "info"})
+        doc = {"accepted": accepted}
+        try:  # keep human-written justification notes across rewrites
+            with open(args.baseline) as fp:
+                notes = json.load(fp).get("notes")
+            if notes:
+                doc["notes"] = notes
+        except (OSError, ValueError):
+            pass
+        with open(args.baseline, "w") as fp:
+            json.dump(doc, fp, indent=1)
+            fp.write("\n")
+        print(f"\nbaseline updated: {len(accepted)} accepted finding(s) "
+              f"-> {args.baseline}")
+        return 0
+
+    baseline = rules.load_baseline(args.baseline)
+    bad = rules.unbaselined(findings, baseline)
+    n_err = len(by_sev["error"])
+    n_warn = len(by_sev["warn"])
+    print(f"\n{n_err} error(s), {n_warn} warning(s), "
+          f"{len(by_sev['info'])} info; "
+          f"{len(bad)} not in baseline ({len(baseline)} accepted)")
+    if bad:
+        print("non-baselined findings (fix them, or accept with "
+              "--update-baseline):")
+        for f in bad:
+            print(f"  {f}")
+        return 1
+    return 0
+
+
+def dataclass_dict(f: rules.Finding) -> dict:
+    return {"rule": f.rule, "severity": f.severity,
+            "where": f.where, "detail": f.detail}
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,397 @@
+"""Bitwidth / overflow proofs for VP and FXP datapaths.
+
+Abstract interpretation over the *formats*, not the tensors: every
+quantity a kernel can produce from a VP(M, f) or FXP(W, F) operand lives
+in a statically known integer interval on a statically known power-of-two
+grid, so bit growth through quantize -> pack -> unpack -> multiply ->
+K-dim accumulate is provable offline, for every shape at once.
+
+The model (paper Sec. II):
+
+  * a quantized element is an integer significand m in
+    [-2^(M-1), 2^(M-1)-1] times a power-of-two scale 2^-f_i, f_i drawn
+    from the static exponent list;
+  * a product of two elements is an integer m_a * m_b on the grid
+    2^-(f_a + f_b).  It fits M_a + M_b - 1 signed bits — the paper's
+    multiplier-width claim — for every input pair EXCEPT min * min,
+    whose +2^(Ma+Mb-2) needs the full M_a + M_b bits (interval
+    arithmetic below proves both halves; `core.formats.product_format`
+    documents the same caveat);
+  * a K-term dot product accumulates K such products.  Expressed on the
+    FINEST product grid 2^-(max f_a + max f_b), every partial sum is an
+    integer of magnitude <= K * max|m_a m_b| * 2^(span_a + span_b) where
+    span = max f - min f (coarse-grid products are left-shifted onto the
+    fine grid).
+
+Accumulator verdicts derived from that integer:
+
+  int32 / int16 accumulators (the block-VP int8 MXU path) WRAP when the
+  raw significand sum exceeds the type: safe iff
+  K * max|m_a m_b| <= 2^(bits-1) - 1.
+
+  float accumulators (every dequant-then-MXU kernel) cannot wrap, but
+  the paper's exact-MAC property only survives while every partial sum
+  is exactly representable: safe iff the fine-grid integer above fits
+  the mantissa (2^24 for f32).  Beyond that K the kernel still computes
+  a correctly-rounded result — the analyzer reports the exactness
+  horizon, it does not forbid the regime (the parity suites pin it at
+  1e-6-class tolerances).
+
+Both bounds are TIGHT: `tests/test_analysis.py` brute-forces random and
+exhaustive worst cases against them (no false "safe" verdicts, and the
+worst case achieves the predicted bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.core.formats import FXPFormat, VPFormat
+from repro.core.packing import WORD_LUT_MAX_BITS
+
+Format = Union[FXPFormat, VPFormat]
+
+# f32: 1 sign, 8 exponent, 23 mantissa bits -> integers up to 2^24 exact,
+# biased exponents of normals in [1, 254].
+F32_MANTISSA_BITS = 24
+F32_MIN_BIASED_EXP = 1
+F32_MAX_BIASED_EXP = 254
+
+
+# ---------------------------------------------------------------------------
+# Integer intervals
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """Closed integer interval [lo, hi] (the abstract domain)."""
+
+    lo: int
+    hi: int
+
+    def __post_init__(self):
+        if self.lo > self.hi:
+            raise ValueError(f"empty interval [{self.lo}, {self.hi}]")
+
+    @property
+    def mag(self) -> int:
+        """Largest absolute value in the interval."""
+        return max(abs(self.lo), abs(self.hi))
+
+    @property
+    def signed_bits(self) -> int:
+        """Width of the smallest two's-complement type holding every
+        value: bits such that [-2^(b-1), 2^(b-1)-1] covers [lo, hi]."""
+        b = 1
+        while self.lo < -(1 << (b - 1)) or self.hi > (1 << (b - 1)) - 1:
+            b += 1
+        return b
+
+    def mul(self, other: "Interval") -> "Interval":
+        """Exact interval of the elementwise product."""
+        c = (self.lo * other.lo, self.lo * other.hi,
+             self.hi * other.lo, self.hi * other.hi)
+        return Interval(min(c), max(c))
+
+    def scale(self, k: int) -> "Interval":
+        """Interval of a K-term sum of values drawn from this interval."""
+        if k < 0:
+            raise ValueError(f"negative accumulation depth K={k}")
+        return Interval(self.lo * k, self.hi * k)
+
+    def shift_left(self, s: int) -> "Interval":
+        return Interval(self.lo << s, self.hi << s)
+
+    def __repr__(self) -> str:
+        return f"[{self.lo}, {self.hi}]"
+
+
+def significand_interval(fmt: Format) -> Interval:
+    """Raw-significand interval of a format (post-quantize: the cascade
+    clips to exactly this range, `core.convert`/`substrate` pin it)."""
+    return Interval(fmt.raw_min, fmt.raw_max)
+
+
+def product_interval(a: Format, b: Format) -> Interval:
+    """Interval of one raw significand product m_a * m_b.
+
+    Its `signed_bits` is M_a + M_b: the single extreme case
+    (-2^(Ma-1)) * (-2^(Mb-1)) = +2^(Ma+Mb-2) exceeds the
+    (Ma+Mb-1)-bit signed maximum by one, so the paper's Sec. II-B
+    "M_a + M_b - 1 bits" multiplier-width claim holds for every product
+    EXCEPT min * min — a caveat this analyzer surfaced in the claim as
+    previously documented by `core.formats.product_format` (harmless at
+    runtime: `vp_mul` computes products in int32 and nothing truncates
+    to the product format's M; `tests/test_analysis.py` pins both
+    halves of the corrected claim).
+    """
+    return significand_interval(a).mul(significand_interval(b))
+
+
+def _span(fmt: Format) -> int:
+    """Exponent spread of a format: max f - min f (0 for FXP, whose
+    scale is a single static 2^-F)."""
+    if isinstance(fmt, VPFormat):
+        return fmt.span
+    return 0
+
+
+def _width(fmt: Format) -> int:
+    return fmt.M if isinstance(fmt, VPFormat) else fmt.W
+
+
+# ---------------------------------------------------------------------------
+# Accumulation proofs
+# ---------------------------------------------------------------------------
+
+def _accum_limit(accum: str) -> Tuple[int, bool]:
+    """(max representable magnitude, is_float) of an accumulator dtype."""
+    if accum in ("int32", "int16", "int8", "int64"):
+        bits = int(accum[3:])
+        return (1 << (bits - 1)) - 1, False
+    if accum == "float32":
+        return 1 << F32_MANTISSA_BITS, True
+    if accum == "bfloat16":
+        return 1 << 8, True
+    if accum == "float64":
+        return 1 << 53, True
+    raise ValueError(f"unknown accumulator dtype {accum!r}")
+
+
+def max_safe_k(a: Format, b: Format, accum: str = "float32") -> int:
+    """Largest accumulation depth K with a safety certificate.
+
+    int accumulators: no two's-complement wraparound of the raw
+    significand sum.  float accumulators: every partial sum of
+    fine-grid product integers stays exactly representable (the paper's
+    exact-MAC property).  0 means even a single product violates the
+    bound.
+    """
+    limit, is_float = _accum_limit(accum)
+    per_product = product_interval(a, b).mag
+    if is_float:
+        # Products land on grids 2^-(f_a + f_b); on the finest grid a
+        # coarse product is left-shifted by up to span_a + span_b bits.
+        per_product <<= _span(a) + _span(b)
+    if per_product == 0:
+        return limit
+    return limit // per_product
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulProof:
+    """The full certificate for one (format pair, K, accumulator)."""
+
+    a: Format
+    b: Format
+    K: int
+    accum: str
+    product_bits: int          # signed bits of one significand product
+    product_exact_f32: bool    # single products exact on an f32 MXU
+    sum_interval: Interval     # raw significand-sum interval at depth K
+    fine_grid_bits: int        # signed bits of the fine-grid sum integer
+    max_safe_k: int            # exactness / no-wrap horizon
+    safe: bool                 # K <= max_safe_k
+    wraps: bool                # int accumulator AND K > max_safe_k
+    reasons: Tuple[str, ...]
+
+    def explain(self) -> str:
+        head = (f"{self.a!r} x {self.b!r} @ K={self.K} into {self.accum}: "
+                f"{'SAFE' if self.safe else 'UNSAFE'}")
+        return "\n".join([head] + [f"  - {r}" for r in self.reasons])
+
+
+def analyze_matmul(
+    a: Format, b: Format, K: int, accum: str = "float32",
+) -> MatmulProof:
+    """Prove (or refute) that a K-deep dot product of a x b quantized
+    elements cannot wrap / lose exactness in the given accumulator."""
+    prod = product_interval(a, b)
+    sum_iv = prod.scale(K)
+    span = _span(a) + _span(b)
+    fine_bits = sum_iv.shift_left(span).signed_bits
+    limit, is_float = _accum_limit(accum)
+    k_max = max_safe_k(a, b, accum)
+    safe = K <= k_max
+    wraps = (not is_float) and not safe
+    product_exact_f32 = prod.mag <= (1 << F32_MANTISSA_BITS)
+
+    reasons: List[str] = [
+        f"significand product in {prod} "
+        f"({prod.signed_bits} = M_a + M_b signed bits; all but "
+        f"min*min fit {prod.signed_bits - 1})",
+        f"raw sum over K={K} in {sum_iv} ({sum_iv.signed_bits} bits)",
+    ]
+    if is_float:
+        reasons.append(
+            f"fine-grid sum integer needs {fine_bits} bits "
+            f"(exponent spans {_span(a)} + {_span(b)}); exact in {accum} "
+            f"up to {limit:#x}")
+        reasons.append(
+            f"exact accumulation horizon: K <= {k_max}"
+            + ("" if safe else
+               f"; beyond it partial sums round (no wraparound — float "
+               f"accumulators saturate gracefully)"))
+    else:
+        reasons.append(
+            f"{accum} holds magnitudes <= {limit:#x}; "
+            f"no-wraparound horizon: K <= {k_max}")
+        if wraps:
+            reasons.append(
+                f"K={K} OVERFLOWS: worst-case sum magnitude "
+                f"{sum_iv.mag:#x} exceeds {limit:#x} — two's-complement "
+                f"wraparound, silently wrong results")
+    if not product_exact_f32:
+        reasons.append(
+            f"single products reach magnitude {prod.mag:#x}: not "
+            f"exactly representable on an f32 MXU "
+            f"(M_a + M_b - 2 = {_width(a) + _width(b) - 2} > "
+            f"{F32_MANTISSA_BITS})")
+    return MatmulProof(
+        a=a, b=b, K=K, accum=accum,
+        product_bits=prod.signed_bits,
+        product_exact_f32=product_exact_f32,
+        sum_interval=sum_iv,
+        fine_grid_bits=fine_bits,
+        max_safe_k=k_max,
+        safe=safe,
+        wraps=wraps,
+        reasons=tuple(reasons),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Field / scale / shift checks (pack, dequant, quantize cascades)
+# ---------------------------------------------------------------------------
+
+def check_pack_fields(fmt: VPFormat) -> List[str]:
+    """Prove the packed-word layout (`core.packing`) cannot truncate.
+
+    The word is (m << E) | i: the significand needs M bits (sign
+    included), the index E bits, and both must fit `storage_bits`.
+    Returns a list of violations (empty = proven safe).
+    """
+    problems: List[str] = []
+    bits = fmt.M + fmt.E
+    try:
+        storage = fmt.storage_bits
+    except ValueError as e:
+        return [f"{fmt!r}: {e}"]
+    if bits > storage:
+        problems.append(
+            f"{fmt!r}: M + E = {bits} information bits exceed the "
+            f"{storage}-bit packed word — pack_vp would truncate the "
+            f"significand's top bits")
+    if significand_interval(fmt).signed_bits > fmt.M:
+        problems.append(
+            f"{fmt!r}: significand interval "
+            f"{significand_interval(fmt)} does not fit M={fmt.M} bits")
+    if fmt.K > (1 << fmt.E):
+        problems.append(
+            f"{fmt!r}: {fmt.K} exponent options exceed the E={fmt.E}-bit "
+            f"index field")
+    return problems
+
+
+def word_lut_entries(fmt: VPFormat) -> Optional[int]:
+    """Size of the offline whole-word dequant LUT when the format admits
+    it (`core.packing.dequant_words`), else None."""
+    bits = fmt.M + fmt.E
+    return (1 << bits) if bits <= WORD_LUT_MAX_BITS else None
+
+
+def check_scale_exponents(fmt: VPFormat) -> List[str]:
+    """Prove every dequant scale 2^-f_i is an f32 NORMAL.
+
+    Both in-kernel scale paths require it: the bit-assembled path writes
+    (127 - f_i) << 23 straight into the exponent field, and the select
+    chain materializes 2.0**-f_i as an f32 constant — a biased exponent
+    outside [1, 254] means denormal/zero/inf scales and silently
+    corrupted dequants.  Returns violations (empty = proven safe).
+    """
+    problems: List[str] = []
+    for fv in fmt.f:
+        biased = 127 - fv
+        if not (F32_MIN_BIASED_EXP <= biased <= F32_MAX_BIASED_EXP):
+            problems.append(
+                f"{fmt!r}: scale 2^-{fv} has biased f32 exponent "
+                f"{biased}, outside the normal range "
+                f"[{F32_MIN_BIASED_EXP}, {F32_MAX_BIASED_EXP}] — the "
+                f"dequant scale degenerates to "
+                f"{'zero/denormal' if biased < 1 else 'inf'}")
+    return problems
+
+
+def check_quantize_shifts(fxp: FXPFormat, vp: VPFormat) -> List[str]:
+    """Prove the Fig.-3 quantize cascade's shifts cannot overflow int32.
+
+    For exponent option k the cascade computes m_k = raw << (f_k - F)
+    when f_k > F (`substrate.quantize_cascade`); raw carries up to W
+    signed bits, so the shifted value needs W + f_k - F bits and an
+    int32 left shift wraps beyond 32 — the in-range test then sees a
+    wrapped value and can select a corrupt (m, i).  Returns violations.
+    """
+    problems: List[str] = []
+    raw_bits = significand_interval(fxp).signed_bits
+    for fv in vp.f:
+        s = fxp.F - fv
+        if s < 0 and raw_bits + (-s) > 32:
+            problems.append(
+                f"{fxp!r} -> {vp!r}: option f={fv} left-shifts the "
+                f"{raw_bits}-bit raw value by {-s} bits "
+                f"({raw_bits - s} > 32) — int32 shift wraparound inside "
+                f"the quantize cascade's range test")
+    return problems
+
+
+def check_format(fmt: Format) -> List[str]:
+    """All single-format static checks (pack fields + scale exponents)."""
+    if isinstance(fmt, FXPFormat):
+        return []
+    return check_pack_fields(fmt) + check_scale_exponents(fmt)
+
+
+def safe_k_table(
+    pairs: Sequence[Tuple[str, Format, Format]],
+    accums: Sequence[str] = ("float32", "int32"),
+) -> List[dict]:
+    """Max-safe-K certificates for a set of named format pairs (the
+    CLI's Table-I report; README quotes it)."""
+    rows = []
+    for name, a, b in pairs:
+        row = {
+            "pair": name,
+            "a": repr(a),
+            "b": repr(b),
+            "product_bits": product_interval(a, b).signed_bits,
+        }
+        for accum in accums:
+            row[f"max_safe_k_{accum}"] = max_safe_k(a, b, accum)
+        rows.append(row)
+    return rows
+
+
+def brute_force_worst_sum(
+    a: Format, b: Format, K: int, fine_grid: bool = False,
+) -> int:
+    """EXACT worst-case |sum| of K products, by construction.
+
+    The worst case of a sum of independent products is K times the worst
+    single product (every term can simultaneously take the extreme
+    value).  With `fine_grid`, products are expressed on the finest
+    product grid — each coarse product shifted by its exponent headroom;
+    the extreme shift and the extreme product co-occur at (raw_min *
+    raw_min, f = min_f).  Used by the soundness tests as an independent
+    oracle against `max_safe_k` / `analyze_matmul`.
+    """
+    worst = 0
+    shifts_a = ([a.max_f - fv for fv in a.f]
+                if isinstance(a, VPFormat) else [0])
+    shifts_b = ([b.max_f - fv for fv in b.f]
+                if isinstance(b, VPFormat) else [0])
+    for ma in (a.raw_min, a.raw_max):
+        for mb in (b.raw_min, b.raw_max):
+            for sa in (shifts_a if fine_grid else [0]):
+                for sb in (shifts_b if fine_grid else [0]):
+                    worst = max(worst, abs(ma * mb) << (sa + sb))
+    return worst * K

@@ -1,0 +1,97 @@
+"""Fail-fast kernel contracts: the analyzer wired into op construction.
+
+`kernels/ops.py` calls these at every op entry.  Each check is an
+`lru_cache`d function of hashable static data (formats, tile sizes), so
+the steady-state cost is one dict lookup per call — but the FIRST call
+with an unsafe combination raises `VPContractError` carrying the
+bitwidth analyzer's explanation, instead of letting the kernel silently
+wrap an accumulator, emit denormal/inf dequant scales, or truncate
+packed fields.
+
+Severity policy (mirrors `analysis.rules`):
+
+  * hard errors (raise): conditions that produce silently WRONG numbers
+    on some input — scale exponents outside the f32 normal range,
+    quantize-cascade shift wraparound, packed-field truncation, and
+    integer-accumulator overflow on the block-VP int8 MXU path;
+  * not errors: float-accumulator exactness horizons.  K beyond
+    `max_safe_k(..., "float32")` rounds (1e-6-class, pinned by the
+    parity suites) but cannot wrap — the CLI reports the horizon, ops
+    stay usable at every K.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+from repro.core.formats import FXPFormat, VPFormat
+from . import bitwidth
+
+Format = Union[FXPFormat, VPFormat]
+
+
+class VPContractError(ValueError):
+    """A statically-provable kernel-contract violation (carries the
+    analyzer's explanation)."""
+
+
+def _raise(problems, what: str):
+    if problems:
+        raise VPContractError(
+            f"static contract violation in {what}:\n  "
+            + "\n  ".join(problems)
+            + "\n(proved by repro.analysis.bitwidth — run "
+            "`python -m repro.analysis` for the full report)")
+
+
+@functools.lru_cache(maxsize=None)
+def require_format_serviceable(fmt: Format, what: str = "kernel op") -> bool:
+    """Hard contract for any op that dequantizes `fmt`: packed fields
+    fit the storage word and every 2^-f_i scale is an f32 normal."""
+    if isinstance(fmt, VPFormat):
+        _raise(bitwidth.check_pack_fields(fmt)
+               + bitwidth.check_scale_exponents(fmt), what)
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def require_quant_safe(fxp: FXPFormat, vp: VPFormat,
+                       what: str = "vp_quant") -> bool:
+    """Hard contract for the quantize cascade: no int32 shift
+    wraparound inside the Fig.-3 range tests, plus the dequant-side
+    format contract (quant ops emit planes someone will dequantize)."""
+    require_format_serviceable(vp, what)
+    _raise(bitwidth.check_quantize_shifts(fxp, vp), what)
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def require_int_accum_safe(
+    a: Format, b: Format, depth: int,
+    accum: str = "int32", what: str = "block_vp_matmul",
+) -> bool:
+    """Hard contract for integer-accumulator matmuls: a `depth`-term
+    raw-significand dot product cannot wrap the accumulator.
+
+    `depth` is the number of products accumulated per integer partial
+    sum — the k-TILE size for the block-VP kernel (each tile's int32
+    MXU sum is rescaled to f32 before crossing tiles), not the full K.
+    """
+    proof = bitwidth.analyze_matmul(a, b, depth, accum)
+    if proof.wraps:
+        raise VPContractError(
+            f"static contract violation in {what}:\n{proof.explain()}")
+    return True
+
+
+def float_exactness_horizon(a: Format, b: Format) -> int:
+    """Max K with exact f32 accumulation (informational, never raises)."""
+    return bitwidth.max_safe_k(a, b, "float32")
+
+
+def check_formats(*fmts: Optional[Format], what: str = "kernel op") -> None:
+    """Convenience: run the serviceability contract over several formats
+    (None entries skipped) — the one-liner ops.py uses."""
+    for f in fmts:
+        if f is not None:
+            require_format_serviceable(f, what)

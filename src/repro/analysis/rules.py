@@ -1,0 +1,384 @@
+"""Rule registry, severity policy, and the full analysis run.
+
+Severities:
+
+  error  statically provable silent corruption: packed-field truncation,
+         dequant scales outside the f32 normal range, quantize-cascade
+         shift wraparound, int-accumulator overflow at a registered
+         depth, a default kernel tiling over the VMEM budget, float64 in
+         a serving graph, asserts guarding runtime conditions in launch
+         scripts.
+  warn   costs performance or robustness but computes correct numbers:
+         full-weight f32 materialization on the packed path, O(vocab)
+         decode work, un-jitted ref oracles, unused imports, persisted
+         autotune cache entries over the VMEM budget (they fail at
+         lowering, costing a crash-then-retune, not wrong numbers).
+  info   reporting only: f32 exact-accumulation horizons per format
+         pair.  Models legitimately accumulate K = d_model >> horizon;
+         beyond it sums are correctly ROUNDED (1e-6-class, pinned by the
+         parity suites), never wrapped — so this must not fail CI.
+
+The CLI (`python -m repro.analysis`) fails on any error/warn finding not
+in the committed baseline (`ANALYSIS_BASELINE.json`); info findings are
+always reported, never fatal.  The baseline keys findings by
+`rule|where` so detail wording can improve without churn.
+
+Import discipline: this module imports only `repro.core` + sibling
+analysis modules at module level, so `kernels.autotune` can import the
+`analysis` package without a cycle; kernels/models/mimo are pulled in
+lazily inside the check functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.formats import FXPFormat, VPFormat
+from . import bitwidth, srclint, vmem
+
+Severity = str  # "error" | "warn" | "info"
+
+RULES: Dict[str, Tuple[Severity, str]] = {
+    "BW-PACK": ("error", "packed-word field truncation"),
+    "BW-SCALE": ("error", "dequant scale outside f32 normal range"),
+    "BW-SHIFT": ("error", "quantize-cascade int32 shift wraparound"),
+    "BW-INT": ("error", "integer accumulator overflow"),
+    "BW-F32K": ("info", "f32 exact-accumulation horizon"),
+    "VM-BUDGET": ("error", "default kernel tiling exceeds VMEM budget"),
+    "VM-CACHE": ("warn", "persisted autotune entry exceeds VMEM budget"),
+    "JX-F64": ("error", "float64/complex128 in a serving graph"),
+    "JX-WMAT": ("warn", "full-weight float materialization"),
+    "JX-VOCAB": ("warn", "O(vocab) work per decode step"),
+    "JX-JIT": ("warn", "ref oracle not jit-wrapped"),
+    "SL-F401": ("warn", "unused import"),
+    "SL-ASSERT": ("error", "assert guarding a runtime condition"),
+    "SL-SYNTAX": ("error", "file does not parse"),
+}
+
+_SEV_ORDER = {"error": 0, "warn": 1, "info": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    where: str
+    detail: str
+
+    @property
+    def severity(self) -> Severity:
+        return RULES[self.rule][0]
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}|{self.where}"
+
+    def __str__(self) -> str:
+        return f"[{self.severity:5s}] {self.rule} {self.where}: {self.detail}"
+
+
+def _from_dicts(ds: Sequence[dict]) -> List[Finding]:
+    return [Finding(d["rule"], d["where"], d["detail"]) for d in ds]
+
+
+# ---------------------------------------------------------------------------
+# The format universe under analysis
+# ---------------------------------------------------------------------------
+
+def analysis_formats():
+    """(named format pairs, quantize pairs, block depth) covering every
+    format the repo registers: Table-I MIMO specs + the model zoo's
+    canonical serving formats."""
+    from repro.configs.base import QuantConfig
+    from repro.mimo.equalizer import table1_specs
+    from repro.models.layers import canonical_formats
+
+    pairs: List[Tuple[str, object, object]] = []
+    quant_pairs: List[Tuple[str, FXPFormat, VPFormat]] = []
+    for spec in table1_specs():
+        if spec.is_vp:
+            pairs.append((f"table1:{spec.name}", spec.y_vp, spec.w_vp))
+            quant_pairs.append((f"table1:{spec.name}:y",
+                                spec.y_fxp, spec.y_vp))
+            quant_pairs.append((f"table1:{spec.name}:w",
+                                spec.w_fxp, spec.w_vp))
+        else:
+            pairs.append((f"table1:{spec.name}", spec.y_fxp, spec.w_fxp))
+    q = QuantConfig(mode="vp")
+    fxp, vp = canonical_formats(q)
+    pairs.append(("zoo:canonical", vp, vp))
+    quant_pairs.append(("zoo:canonical", fxp, vp))
+    return pairs, quant_pairs, QuantConfig().block
+
+
+def check_bitwidth() -> List[Finding]:
+    """BW-*: pack/scale/shift/accumulator proofs over every registered
+    format, plus the f32 exactness horizons (info)."""
+    pairs, quant_pairs, depth = analysis_formats()
+    findings: List[Finding] = []
+    seen_fmts = []
+    for _, a, b in pairs:
+        for f in (a, b):
+            if isinstance(f, VPFormat) and f not in seen_fmts:
+                seen_fmts.append(f)
+    for fmt in seen_fmts:
+        for msg in bitwidth.check_pack_fields(fmt):
+            findings.append(Finding("BW-PACK", f"format:{fmt!r}", msg))
+        for msg in bitwidth.check_scale_exponents(fmt):
+            findings.append(Finding("BW-SCALE", f"format:{fmt!r}", msg))
+    for name, fxp, vp in quant_pairs:
+        for msg in bitwidth.check_quantize_shifts(fxp, vp):
+            findings.append(Finding("BW-SHIFT", f"quant:{name}", msg))
+    # The block-VP int8 MXU path accumulates `depth` products in int32
+    # per k-tile (kernels/vp_block_matmul.py).
+    for name, a, b in pairs:
+        proof = bitwidth.analyze_matmul(a, b, depth, "int32")
+        if proof.wraps:
+            findings.append(Finding(
+                "BW-INT", f"block_vp:{name}@K{depth}", proof.explain()))
+    for row in bitwidth.safe_k_table(pairs):
+        findings.append(Finding(
+            "BW-F32K", f"pair:{row['pair']}",
+            f"{row['a']} x {row['b']}: product {row['product_bits']} "
+            f"bits; exact-f32 K <= {row['max_safe_k_float32']}, "
+            f"int32 no-wrap K <= {row['max_safe_k_int32']}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# VMEM rules
+# ---------------------------------------------------------------------------
+
+# Representative serving shapes: skinny decode, prefill, square.
+_MATMUL_SHAPES = ((8, 4096, 4096), (2048, 4096, 4096), (4096, 4096, 4096))
+
+
+def check_vmem_defaults() -> List[Finding]:
+    """VM-BUDGET: the tiling `resolve_blocks` launches WITHOUT a cache
+    entry (native-floored heuristic) must fit the budget for every
+    registered kernel at representative serving shapes."""
+    from repro.configs.base import QuantConfig
+    from repro.kernels import autotune
+    from repro.models.layers import canonical_formats
+
+    _, vp = canonical_formats(QuantConfig(mode="vp"))
+    findings: List[Finding] = []
+    budget = vmem.vmem_budget_bytes()
+    kernels = (
+        ("vp_matmul", (vp, vp)),
+        ("vp_matmul_packed", (vp, vp)),
+        ("vp_dequant_matmul", (vp,)),
+        ("vp_quant_matmul", (vp, vp)),
+        (f"block_vp_matmul_bk{QuantConfig().block}", (vp, vp)),
+    )
+    for kernel, formats in kernels:
+        for shape in _MATMUL_SHAPES:
+            blocks = autotune._native_floor(
+                autotune.heuristic_blocks(*shape))
+            ok, need = vmem.vmem_feasible(
+                kernel, blocks, formats, shape, budget=budget)
+            if not ok:
+                findings.append(Finding(
+                    "VM-BUDGET", f"{kernel}@{'x'.join(map(str, shape))}",
+                    f"default tiling {blocks} needs {need} bytes "
+                    f"> budget {budget}"))
+    # Attention defaults: decode (B, Smax, KV, dh, window, rolling) and
+    # prefill (B, H, KV, dh, Sq, Sk, window) with the heuristic chunking.
+    attn = (
+        ("vp_decode_attention", (8, 4096, 8, 128, 0, 0), (8, 256, 1),
+         (vp,)),
+        ("flash_prefill", (2, 32, 8, 128, 4096, 4096, 0), (128, 256, 1),
+         ()),
+    )
+    for kernel, shape, blocks, formats in attn:
+        ok, need = vmem.vmem_feasible(
+            kernel, blocks, formats, shape, budget=budget)
+        if not ok:
+            findings.append(Finding(
+                "VM-BUDGET", f"{kernel}@{'x'.join(map(str, shape))}",
+                f"default chunking {blocks} needs {need} bytes "
+                f"> budget {budget}"))
+    return findings
+
+
+_FMT_RE = re.compile(
+    r"VP\((\d+),\[([^\]]*)\]\)|FXP\((\d+),(-?\d+)\)")
+
+
+def _parse_formats(s: str) -> List[object]:
+    out: List[object] = []
+    for m in _FMT_RE.finditer(s):
+        if m.group(1) is not None:
+            f = tuple(int(v) for v in m.group(2).split(",") if v.strip())
+            out.append(VPFormat(int(m.group(1)), f))
+        else:
+            out.append(FXPFormat(int(m.group(3)), int(m.group(4))))
+    return out
+
+
+def check_vmem_cache() -> List[Finding]:
+    """VM-CACHE: audit every persisted autotune entry against the budget
+    (a stale or foreign-budget entry fails at lowering on launch)."""
+    from repro.kernels import autotune
+
+    path = autotune.cache_path()
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return []
+    findings: List[Finding] = []
+    for key, blocks in sorted(data.items()):
+        parts = key.split("|")
+        if len(parts) != 4 or len(blocks) != 3:
+            continue
+        kernel, dims, fmts, _backend = parts
+        try:
+            shape = [int(x) for x in dims.split("x")]
+        except ValueError:
+            continue
+        ok, need = vmem.vmem_feasible(
+            kernel, tuple(blocks), _parse_formats(fmts), shape)
+        if not ok:
+            findings.append(Finding(
+                "VM-CACHE", key,
+                f"cached tiling {tuple(blocks)} needs {need} bytes "
+                f"> budget {vmem.vmem_budget_bytes()}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr rules
+# ---------------------------------------------------------------------------
+
+def _op_thunks():
+    """Tiny representative launches of every registered kernel op, for
+    trace-level linting (never executed)."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import QuantConfig
+    from repro.core.packing import storage_dtype
+    from repro.kernels import ops
+    from repro.models.layers import canonical_formats
+
+    fxp, vp = canonical_formats(QuantConfig(mode="vp"))
+    wdt = storage_dtype(vp)
+    m = jnp.zeros((16, 16), jnp.int8)
+    i = jnp.zeros((16, 16), jnp.uint8)
+    w = jnp.zeros((16, 16), wdt)
+    x = jnp.zeros((16, 16), jnp.float32)
+    q4 = jnp.zeros((1, 1, 4, 32), jnp.float32)
+    kv = jnp.zeros((1, 64, 2, 32), wdt)
+    sc = jnp.zeros((1, 64, 1, 1), jnp.float32)
+    ln = jnp.zeros((1,), jnp.int32)
+    qp = jnp.zeros((1, 16, 4, 32), jnp.float32)
+    kp = jnp.zeros((1, 16, 2, 32), jnp.float32)
+    return (
+        ("vp_quant", lambda: ops.vp_quant(x, fxp, vp, packed=True)),
+        ("vp_dequant", lambda: ops.vp_dequant(w, None, vp)),
+        ("vp_matmul", lambda: ops.vp_matmul(m, i, m, i, vp, vp)),
+        ("vp_matmul_packed",
+         lambda: ops.vp_matmul(w, None, w, None, vp, vp)),
+        ("vp_dequant_matmul",
+         lambda: ops.vp_dequant_matmul(x, w, vp)),
+        ("vp_quant_matmul",
+         lambda: ops.vp_quant_matmul(x, x, fxp, vp, fxp, vp)),
+        ("block_vp_matmul",
+         lambda: ops.block_vp_matmul(
+             jnp.zeros((16, 256), jnp.int8), jnp.zeros((16, 1), jnp.uint8),
+             jnp.zeros((256, 16), jnp.int8), jnp.zeros((1, 16), jnp.uint8),
+             vp, vp, bk=256)),
+        ("vp_decode_attention",
+         lambda: ops.vp_decode_attention(q4, kv, kv, sc, sc, ln, vp)),
+        ("flash_prefill", lambda: ops.flash_prefill(qp, kp, kp)),
+    )
+
+
+def check_jaxpr_ops() -> List[Finding]:
+    from . import jaxpr_lint
+
+    return _from_dicts(jaxpr_lint.lint_kernel_ops(_op_thunks()))
+
+
+def check_ref_jit() -> List[Finding]:
+    from . import jaxpr_lint
+
+    return _from_dicts(jaxpr_lint.lint_ref_jit())
+
+
+def check_models(archs: Optional[Sequence[str]] = None) -> List[Finding]:
+    """JX-* over the model zoo's serving traces (smoke configs, VP-packed
+    quantization with a packed KV cache — the full kernel-backed path)."""
+    import dataclasses as dc
+
+    from repro.configs.base import QuantConfig
+    from repro.configs.registry import ARCH_NAMES, get_smoke_config
+    from . import jaxpr_lint
+
+    q = QuantConfig(mode="vp", quantize_kv_cache=True, kv_layout="packed")
+    findings: List[Finding] = []
+    for arch in (archs if archs is not None else ARCH_NAMES):
+        cfg = get_smoke_config(arch, quant=q)
+        if cfg.family in ("ssm", "hybrid"):
+            # SSM caches are float state, not KV tensors.
+            cfg = dc.replace(cfg, quant=dc.replace(
+                q, quantize_kv_cache=False))
+        findings.extend(_from_dicts(
+            jaxpr_lint.lint_model(cfg, name=arch)))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Source lint + assembly
+# ---------------------------------------------------------------------------
+
+def _src_root() -> str:
+    # .../src/repro/analysis/rules.py -> .../src/repro
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_sources() -> List[Finding]:
+    return _from_dicts(srclint.lint_tree(_src_root()))
+
+
+def run_all(
+    archs: Optional[Sequence[str]] = None,
+    models: bool = True,
+) -> List[Finding]:
+    findings: List[Finding] = []
+    findings.extend(check_bitwidth())
+    findings.extend(check_vmem_defaults())
+    findings.extend(check_vmem_cache())
+    findings.extend(check_sources())
+    findings.extend(check_ref_jit())
+    findings.extend(check_jaxpr_ops())
+    if models:
+        findings.extend(check_models(archs))
+    findings.sort(key=lambda f: (_SEV_ORDER[f.severity], f.rule, f.where))
+    return findings
+
+
+def default_baseline_path() -> str:
+    # repo root = parent of src/
+    return os.path.join(
+        os.path.dirname(os.path.dirname(_src_root())),
+        "ANALYSIS_BASELINE.json")
+
+
+def load_baseline(path: str) -> List[str]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return list(data.get("accepted", []))
+    except (OSError, ValueError):
+        return []
+
+
+def unbaselined(findings: Sequence[Finding],
+                baseline: Sequence[str]) -> List[Finding]:
+    """Error/warn findings not covered by the baseline (the CI gate)."""
+    accepted = set(baseline)
+    return [f for f in findings
+            if f.severity != "info" and f.key not in accepted]

@@ -1,0 +1,101 @@
+"""Minimal AST source lint: the offline subset of the CI ruff job.
+
+The container has no ruff/pyflakes, but the CI `static-analysis` job
+pip-installs a pinned ruff — so anything ruff would flag must be
+catchable LOCALLY before push.  This module reimplements exactly the
+rules the CI selects, nothing more:
+
+  SL-F401    an imported name never used in the module (matches ruff
+             F401; `__init__.py` re-export files are exempt, as in the
+             ruff per-file-ignores).
+  SL-ASSERT  an `assert` statement under `src/repro/launch/`: launch
+             scripts validate RUNTIME conditions (finite logits, arg
+             combinations), and asserts vanish under `python -O` —
+             kernel-internal invariant asserts elsewhere are fine.
+  SL-SYNTAX  a file that does not parse (ruff E999).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List
+
+
+def _imported_names(tree: ast.AST) -> Dict[str, int]:
+    """name -> first lineno for every binding an import creates."""
+    names: Dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                bound = a.asname or a.name.split(".")[0]
+                names.setdefault(bound, node.lineno)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                names.setdefault(a.asname or a.name, node.lineno)
+    return names
+
+
+def _used_names(tree: ast.AST) -> set:
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+        elif (isinstance(node, ast.Constant)
+              and isinstance(node.value, str)):
+            # `__all__` entries and string annotations reference by name.
+            used.add(node.value)
+    return used
+
+
+def lint_file(path: str, rel: str) -> List[Dict[str, str]]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [{"rule": "SL-SYNTAX", "where": f"{rel}:{e.lineno}",
+                 "detail": str(e)}]
+    findings: List[Dict[str, str]] = []
+    if os.path.basename(path) != "__init__.py":
+        used = _used_names(tree)
+        for name, lineno in sorted(
+                _imported_names(tree).items(), key=lambda kv: kv[1]):
+            if name not in used:
+                findings.append({
+                    "rule": "SL-F401", "where": f"{rel}:{lineno}",
+                    "detail": f"imported name `{name}` is never used"})
+    if f"{os.sep}launch{os.sep}" in path or rel.startswith("launch/"):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assert):
+                findings.append({
+                    "rule": "SL-ASSERT", "where": f"{rel}:{node.lineno}",
+                    "detail": "assert in a launch script vanishes under "
+                              "`python -O` — raise an explicit error"})
+    return findings
+
+
+def _py_files(root: str) -> Iterator[str]:
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_tree(root: str) -> List[Dict[str, str]]:
+    """Lint every .py under `root` (the `src/` tree in the CLI)."""
+    findings: List[Dict[str, str]] = []
+    for path in _py_files(root):
+        rel = os.path.relpath(path, root)
+        findings.extend(lint_file(path, rel))
+    return findings

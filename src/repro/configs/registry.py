@@ -8,7 +8,7 @@ same-family config for CPU tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 from .base import ModelConfig, QuantConfig
 from . import (

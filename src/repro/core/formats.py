@@ -100,6 +100,14 @@ class VPFormat:
         return self.f[-1]
 
     @property
+    def span(self) -> int:
+        """Exponent spread max f - min f: the bit headroom a coarse-grid
+        value needs when re-expressed on the finest grid 2^-max_f (the
+        quantity that drives accumulator bit growth — see
+        `repro.analysis.bitwidth`)."""
+        return self.max_f - self.min_f
+
+    @property
     def bits_per_element(self) -> float:
         """Information content per element: significand + index bits."""
         return self.M + self.E
@@ -144,9 +152,15 @@ def product_format(a: VPFormat, b: VPFormat) -> VPFormat:
     index-concatenation order ((i_a << E_b) | i_b); it is built OFFLINE and
     handed to the VP2FXP converter — the multiplier itself never adds
     exponents.  The significand product of M_a x M_b two's-complement inputs
-    fits in (M_a + M_b - 1) bits; the single extreme case
-    (-2^(Ma-1)) * (-2^(Mb-1)) = +2^(Ma+Mb-2) still fits as a signed
-    (Ma+Mb-1)-bit value.
+    fits in (M_a + M_b - 1) bits for every input pair EXCEPT the single
+    extreme case (-2^(Ma-1)) * (-2^(Mb-1)) = +2^(Ma+Mb-2), which exceeds
+    the (Ma+Mb-1)-bit signed maximum 2^(Ma+Mb-2)-1 by one (the paper's
+    Sec. II-B width claim, with the caveat made explicit —
+    `repro.analysis.bitwidth.product_interval` proves the exact interval).
+    M here records the paper's multiplier width; nothing in the runtime
+    path truncates to it — `vp_mul` computes products exactly in int32
+    and `vp2fxp` shifts/clips on the TARGET format only, so the one-off
+    case stays exact end to end.
 
     The pairwise-sum list is generally NOT sorted descending (it is sorted
     within each i_a-block); product VP numbers are only ever consumed by

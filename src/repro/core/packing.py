@@ -32,6 +32,13 @@ import numpy as np
 
 from .formats import VPFormat
 
+# Widest format served by the offline whole-word dequant LUT: one gather
+# from a 2^bits-entry f32 table.  12 information bits = 4096 entries
+# (16 KiB) — beyond that the table outgrows cache locality and the
+# two-op unpack + exponent scale wins.  `repro.analysis` references this
+# constant when budgeting LUT-consuming paths.
+WORD_LUT_MAX_BITS = 12
+
 
 def storage_dtype(fmt: VPFormat):
     """The packed-word dtype for a format: int8 / int16 / int32."""
@@ -86,6 +93,7 @@ def _dequant_lut_np(fmt: VPFormat) -> np.ndarray:
     shift/mask/scale path (tests/test_packing.py pins it).
     """
     bits = fmt.M + fmt.E
+    assert bits <= WORD_LUT_MAX_BITS, fmt
     idx = np.arange(1 << bits)
     m = (idx >> fmt.E).astype(np.int64)
     m = np.where(m >= (1 << (fmt.M - 1)), m - (1 << fmt.M), m)
@@ -103,7 +111,7 @@ def dequant_words(w, fmt: VPFormat, dtype=jnp.float32):
     unpack + exponent scale.  Both are exact and bit-identical in f32.
     """
     bits = fmt.M + fmt.E
-    if bits <= 12 and dtype == jnp.float32:
+    if bits <= WORD_LUT_MAX_BITS and dtype == jnp.float32:
         lut = jnp.asarray(_dequant_lut_np(fmt))
         u = jnp.bitwise_and(w.astype(jnp.int32), (1 << bits) - 1)
         return jnp.take(lut, u, axis=0)

@@ -22,7 +22,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from .formats import FXPFormat, VPFormat
-from .fxp import fxp_quantize, fxp_to_float
+from .fxp import fxp_quantize
 from .convert import fxp2vp, vp_to_float
 
 

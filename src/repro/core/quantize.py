@@ -13,13 +13,13 @@ packages that pipeline for ML tensors:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .formats import FXPFormat, VPFormat
-from .fxp import fxp_quantize, fxp_to_float
+from .fxp import fxp_quantize
 from .convert import fxp2vp, vp_to_float
 from .vp_tensor import VPTensor, significand_dtype
 

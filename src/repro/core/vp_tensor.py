@@ -8,7 +8,6 @@ through jit/pjit without retracing on values.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -35,6 +35,8 @@ import threading
 import time
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
+from repro.analysis import vmem as _vmem
+
 Blocks = Tuple[int, int, int]
 
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
@@ -359,6 +361,12 @@ def tune(
     wall-clock).  The winner lands in the on-disk cache under
     `make_key(...)`, so every later `resolve_blocks` call with the same
     key launches it for free.
+
+    Candidates whose static VMEM footprint (`repro.analysis.vmem` — a
+    lower bound built from the kernel's block specs and scratch shapes)
+    exceeds the per-core budget are pruned BEFORE timing: they could only
+    ever fail to lower, so skipping them shortens tuning without changing
+    any winner.  Unmodeled kernels are never pruned.
     """
     key = make_key(kernel, shape, formats, backend)
     cached = get_cached(key)
@@ -366,9 +374,21 @@ def tune(
         return cached
     M, K, N = (int(d) for d in shape[-3:])
     cands = tuple(candidates) if candidates else default_candidates(M, K, N)
+    budget = _vmem.vmem_budget_bytes()
+    feasible, pruned = [], []
+    for blocks in cands:
+        ok, need = _vmem.vmem_feasible(
+            kernel, blocks, formats, shape, budget=budget)
+        (feasible if ok else pruned).append((blocks, need))
+    if not feasible:
+        raise RuntimeError(
+            f"autotune: every candidate tiling for {key} exceeds the "
+            f"{budget}-byte VMEM budget (smallest modeled footprint "
+            f"{min(n for _, n in pruned)} bytes — repro.analysis.vmem); "
+            "pass smaller explicit blocks or candidates")
     best, best_t = None, float("inf")
     last_err: Optional[Exception] = None
-    for blocks in cands:
+    for blocks, _ in feasible:
         try:
             bench_fn(blocks)  # warmup / compile
             t = float("inf")
@@ -386,7 +406,7 @@ def tune(
         # shapes/formats, mask-grid mismatch...).  Recording the untested
         # heuristic as a "tuned winner" would hide that forever.
         raise RuntimeError(
-            f"autotune: all {len(cands)} candidates failed for {key}; "
-            f"last error: {last_err!r}") from last_err
+            f"autotune: all {len(feasible)} feasible candidates failed "
+            f"for {key}; last error: {last_err!r}") from last_err
     record(key, best)
     return best

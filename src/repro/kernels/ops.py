@@ -32,6 +32,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.analysis import contracts
 from repro.core.formats import FXPFormat, VPFormat
 from repro.core import packing as pk
 from . import autotune, ref, substrate
@@ -145,6 +146,7 @@ def vp_quant(x, fxp: FXPFormat, vp: VPFormat,
     `vp.storage_bits` bits/element) — the layout every matmul op accepts
     as (plane, None).
     """
+    contracts.require_quant_safe(fxp, vp, "vp_quant")
     backend = substrate.resolve_backend(interpret)
     shape = x.shape
     x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
@@ -175,6 +177,7 @@ def vp_dequant(m, i=None, vp: VPFormat = None, dtype=jnp.float32,
         raise TypeError(
             "vp_dequant takes (m, i, vp) for planes or (w, None, vp) for "
             "packed words — the format is always the THIRD argument")
+    contracts.require_format_serviceable(vp, "vp_dequant")
     backend = substrate.resolve_backend(interpret)
     packed = i is None
     shape = m.shape
@@ -216,6 +219,7 @@ def vp_matmul(
     kernel path moves one HBM word per element.  `blocks=None` resolves
     through the autotuner (cache, else shape-clamped heuristic).
     """
+    contracts.check_formats(a_fmt, b_fmt, what="vp_matmul")
     M, K = a_m.shape
     _, N = b_m.shape
     backend = substrate.resolve_backend(interpret)
@@ -277,6 +281,7 @@ def vp_dequant_matmul(
     `autotune.tune_serving_decode` for the M=1..B profile).  `out_dtype`
     defaults to the activation dtype (the models' compute dtype).
     """
+    contracts.require_format_serviceable(w_fmt, "vp_dequant_matmul")
     M, K = x.shape
     _, N = w.shape
     out_dtype = x.dtype if out_dtype is None else out_dtype
@@ -312,6 +317,8 @@ def vp_quant_matmul(
     CSPADE masks follow the `blocks` tile grid and require tile-aligned
     operands (mask calibration needs the planes anyway — see mvm_engine).
     """
+    contracts.require_quant_safe(a_fxp, a_vp, "vp_quant_matmul")
+    contracts.require_quant_safe(b_fxp, b_vp, "vp_quant_matmul")
     M, K = a.shape
     _, N = b.shape
     backend = substrate.resolve_backend(interpret)
@@ -349,6 +356,7 @@ def vp_matmul_batched(
     (batch, tile): a_act (G, M/bm, K/bk), b_act (G, K/bk, N/bn).
     Packed-word operands: pass the packed planes with `a_i`/`b_i` None.
     """
+    contracts.check_formats(a_fmt, b_fmt, what="vp_matmul_batched")
     G, M, K = a_m.shape
     _, _, N = b_m.shape
     backend = substrate.resolve_backend(interpret)
@@ -406,6 +414,8 @@ def vp_quant_matmul_batched(
     `vp_matmul_batched`, with no quantized-plane HBM round-trip — ONE
     pallas_call for the whole batch.
     """
+    contracts.require_quant_safe(a_fxp, a_vp, "vp_quant_matmul_batched")
+    contracts.require_quant_safe(b_fxp, b_vp, "vp_quant_matmul_batched")
     G, M, K = a.shape
     _, _, N = b.shape
     backend = substrate.resolve_backend(interpret)
@@ -447,6 +457,7 @@ def vp_decode_attention(
     resolves the (bq, bkv, 1) chunking through the autotuner, keyed on
     (B, Smax, KV, dh, window, rolling).
     """
+    contracts.require_format_serviceable(fmt, "vp_decode_attention")
     backend = substrate.resolve_backend(interpret)
     if backend == "ref":
         return ref.vp_decode_attention_ref(
@@ -513,8 +524,11 @@ def flash_prefill(
     B, Sq, H, dh = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
-    if pattern in ("causal", "local"):
-        assert Sq == Sk, "causal/local prefill requires Sq == Sk"
+    if pattern in ("causal", "local") and Sq != Sk:
+        # A real serving-input condition, not an internal invariant — it
+        # must survive `python -O` (asserts are stripped).
+        raise ValueError(
+            f"causal/local prefill requires Sq == Sk, got {Sq} != {Sk}")
     blocks = autotune.resolve_attn_blocks(
         "flash_prefill",
         (B, H, KV, dh, Sq, Sk, window or 0), (), backend,
@@ -544,6 +558,10 @@ def block_vp_matmul(
     out_dtype=jnp.float32,
 ):
     """Block-VP int8 matmul; index granularity = (row, k-block)."""
+    contracts.check_formats(a_fmt, b_fmt, what="block_vp_matmul")
+    # Each k-tile's raw-significand dot accumulates `bk` int products
+    # before the f32 rescale — prove that sum cannot wrap int32.
+    contracts.require_int_accum_safe(a_fmt, b_fmt, bk)
     if blocks is not None and blocks[1] != bk:
         # Validate on EVERY backend (the ref path is the parity oracle;
         # a contract violation must not pass on CPU and crash on TPU).

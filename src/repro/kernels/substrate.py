@@ -27,8 +27,9 @@ cloning it per format.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -353,6 +354,30 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Set only by `force_backend`; overrides the interpret/platform mapping.
+_FORCED: list = []
+
+
+@contextlib.contextmanager
+def force_backend(backend: str) -> Iterator[None]:
+    """Pin `resolve_backend` to one backend inside the context.
+
+    Used by `repro.analysis.jaxpr_lint` to trace model forwards through
+    the "interpret" path on CPU, so the traced jaxpr contains the actual
+    `pallas_call` kernel launches instead of the ref oracles (whose
+    full-tensor dequants are fine for an oracle but would be findings on
+    the serving path).  Re-entrant; restores the previous behavior on
+    exit.  Not thread-safe — linting is a single-threaded CLI activity.
+    """
+    if backend not in ("native", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}")
+    _FORCED.append(backend)
+    try:
+        yield
+    finally:
+        _FORCED.pop()
+
+
 def resolve_backend(interpret: Optional[bool]) -> str:
     """Map a public op's `interpret` argument to an execution backend.
 
@@ -366,7 +391,12 @@ def resolve_backend(interpret: Optional[bool]) -> str:
     lowering": attempting TPU lowering on a CPU backend was the seed bug
     (`use_kernel = _on_tpu() if interpret is None else True`) that this
     dispatcher retires for every op at once.
+
+    A `force_backend` context overrides the mapping entirely (analysis
+    tracing only).
     """
+    if _FORCED:
+        return _FORCED[-1]
     if interpret:
         return "interpret"
     return "native" if on_tpu() else "ref"

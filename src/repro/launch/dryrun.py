@@ -22,18 +22,16 @@ import json
 import re
 import sys
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, QuantConfig
 from repro.configs import registry
 from repro.models import (
     init_params, init_cache, quantize_params, model_dtype,
 )
-from repro.models.model import _cross_kv
 from repro.optim.optimizer import OptConfig, init_opt_state
 from repro.train.train_step import (
     make_train_step, make_serve_step, make_prefill_step,

@@ -25,7 +25,8 @@ now exercise the same kernel substrate.
                     (persisted in the autotune cache, so later launches
                     hit measured tilings)
   --json F          write a serving report (tokens/sec, packed bytes) to F
-  --smoke           reduced config; also ASSERTS finite logits end to end
+  --smoke           reduced config; also CHECKS finite logits end to end
+                    (a real raise, not an assert — survives `python -O`)
 """
 from __future__ import annotations
 
@@ -42,6 +43,17 @@ from repro.models import (
     init_params, init_cache, prefill, decode_step, quantize_params,
 )
 from repro.models.layers import canonical_formats
+
+
+def _require_finite(logits, what: str) -> None:
+    """Raise if any logit is NaN/inf.
+
+    This is a runtime serving check on real model output, not an
+    internal invariant — it must fire under `python -O` too, where
+    `assert` statements are stripped, so it raises explicitly.
+    """
+    if not bool(jnp.isfinite(logits).all()):
+        raise FloatingPointError(f"non-finite {what} logits")
 
 
 def _quantized_bytes(params) -> int:
@@ -277,8 +289,8 @@ def main():
     report["prefill_s"] = prefill_s
     print(f"[prefill] {B}x{args.prompt_len} in {prefill_s:.2f}s")
     if args.smoke:
-        assert bool(jnp.isfinite(logits).all()), \
-            f"non-finite prefill logits ({args.arch}, {args.quant})"
+        _require_finite(
+            logits, f"prefill ({args.arch}, {args.quant})")
 
     decode = jax.jit(
         lambda p, t, c: decode_step(p, t, c, cfg, cross_kv=cross_kv)
@@ -299,8 +311,8 @@ def main():
     jax.block_until_ready(logits)
     dt = time.time() - t0
     if args.smoke:
-        assert bool(jnp.isfinite(logits).all()), \
-            f"non-finite decode logits ({args.arch}, {args.quant})"
+        _require_finite(
+            logits, f"decode ({args.arch}, {args.quant})")
     gen = jnp.concatenate(out_tokens, axis=1)
     tok_s = B * args.gen / dt
     report["decode_s"] = dt

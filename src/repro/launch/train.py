@@ -12,7 +12,6 @@ bit-exactly (tested in tests/test_substrate.py).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

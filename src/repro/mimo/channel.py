@@ -12,7 +12,6 @@ qualitative statistics.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import (

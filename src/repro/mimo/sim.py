@@ -8,7 +8,7 @@ Reproduces:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp

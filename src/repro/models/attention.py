@@ -12,14 +12,13 @@ Decode attends a single query against the (optionally VP-quantized) cache.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, QuantConfig
-from repro.core import FXPFormat, VPFormat, default_vp_format
+from repro.core import FXPFormat, default_vp_format
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels import substrate as ksub

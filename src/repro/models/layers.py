@@ -26,19 +26,13 @@ serving/checkpoint-export time.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    FXPFormat,
-    VPFormat,
-    default_vp_format,
-    vp_fake_quant_ste,
-    block_vp_quantize,
-    block_vp_dequantize,
+    FXPFormat, default_vp_format, vp_fake_quant_ste, block_vp_quantize, block_vp_dequantize,
 )
 from repro.core.packing import dequant_words
 from repro.core.vp_tensor import pack_indices, unpack_indices

@@ -23,17 +23,14 @@ weights to the configured serving representation (VP planes etc.).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, QuantConfig
-from .layers import (
-    qdot, qdense, rms_norm, layer_norm, rope, embed_lookup, quantize_weight,
-)
-from .attention import attn_block, flash_attention
+from repro.configs.base import ModelConfig
+from .layers import qdot, rms_norm, layer_norm, embed_lookup, quantize_weight
+from .attention import attn_block
 from .mlp import swiglu, gelu_mlp
 from .moe import moe_block
 from .mamba2 import mamba2_block, mamba2_dims, D_CONV

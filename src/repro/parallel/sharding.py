@@ -18,7 +18,7 @@ rest from the weight shardings.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -9,9 +9,6 @@ compression plugs into the DP reduction.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,276 @@
+"""Static analyzer: soundness against brute force, contracts, VMEM model.
+
+The analyzer's job is to hand out safety certificates, so its own tests
+are adversarial: every bound is checked against an independently
+constructed worst case (`bitwidth.brute_force_worst_sum`) over random
+formats — no false "safe" verdicts (soundness), and the bound is
+achieved (tightness, so the certificates are not vacuously conservative).
+The autotune-pruning test pins the acceptance criterion that a
+VMEM-infeasible candidate tiling is rejected WITHOUT ever being timed.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (
+    bitwidth, contracts, rules, srclint, vmem, VPContractError,
+)
+from repro.core import FXPFormat, VPFormat
+from repro.kernels import autotune
+
+Y_VP, W_VP = VPFormat(7, (1, -1)), VPFormat(7, (11, 9, 7, 6))
+Y_FXP, W_FXP = FXPFormat(9, 1), FXPFormat(12, 11)
+
+# Random-but-valid format strategies: M/W small enough that products and
+# sums stay in exact-int range for the brute-force oracle (python ints
+# are unbounded anyway), f lists descending with power-of-two length and
+# every 2^-f an f32 normal.
+_f_values = st.integers(min_value=-20, max_value=40)
+_vp_formats = st.tuples(
+    st.integers(min_value=2, max_value=9),
+    st.lists(_f_values, min_size=1, max_size=8, unique=True),
+).filter(lambda t: (len(t[1]) & (len(t[1]) - 1)) == 0).map(
+    lambda t: VPFormat(t[0], tuple(sorted(t[1], reverse=True))))
+_fxp_formats = st.tuples(
+    st.integers(min_value=2, max_value=16),
+    st.integers(min_value=-4, max_value=20),
+).map(lambda t: FXPFormat(*t))
+_formats = st.one_of(_vp_formats, _fxp_formats)
+
+
+# ---------------------------------------------------------------------------
+# Bitwidth proofs vs the brute-force oracle
+# ---------------------------------------------------------------------------
+
+@given(a=_formats, b=_formats)
+@settings(max_examples=80, deadline=None)
+def test_product_interval_corrects_paper_width_claim(a, b):
+    # Sec. II claims the significand product fits M_a + M_b - 1 signed
+    # bits.  The analyzer surfaced the off-by-one: min * min hits
+    # +2^(Ma+Mb-2), one past the (Ma+Mb-1)-bit signed max, so the true
+    # width is M_a + M_b — while every OTHER product does fit the
+    # claimed width (harmless at runtime: vp_mul computes in int32).
+    Ma = a.M if isinstance(a, VPFormat) else a.W
+    Mb = b.M if isinstance(b, VPFormat) else b.W
+    iv = bitwidth.product_interval(a, b)
+    assert iv.hi == a.raw_min * b.raw_min == 1 << (Ma + Mb - 2)
+    assert iv.signed_bits == Ma + Mb
+    # Excluding the single extreme pair restores the paper's width.
+    assert bitwidth.Interval(iv.lo, iv.hi - 1).signed_bits == Ma + Mb - 1
+    assert iv.mag == bitwidth.brute_force_worst_sum(a, b, 1)
+
+
+@given(a=_formats, b=_formats,
+       k=st.integers(min_value=0, max_value=1 << 20))
+@settings(max_examples=120, deadline=None)
+def test_int_no_wrap_bound_sound_and_tight(a, b, k):
+    for accum, bits in (("int32", 32), ("int16", 16)):
+        limit = (1 << (bits - 1)) - 1
+        k_max = bitwidth.max_safe_k(a, b, accum)
+        # Soundness: everything the analyzer certifies really fits.
+        if k <= k_max:
+            assert bitwidth.brute_force_worst_sum(a, b, k) <= limit
+        proof = bitwidth.analyze_matmul(a, b, k, accum)
+        assert proof.safe == (k <= k_max)
+        assert proof.wraps == (k > k_max)
+        # Tightness: one more accumulation step overflows for real.
+        if k_max < (1 << 40):
+            assert bitwidth.brute_force_worst_sum(a, b, k_max + 1) > limit
+
+
+@given(a=_formats, b=_formats,
+       k=st.integers(min_value=0, max_value=1 << 20))
+@settings(max_examples=120, deadline=None)
+def test_f32_exactness_bound_sound_and_tight(a, b, k):
+    limit = 1 << bitwidth.F32_MANTISSA_BITS
+    k_max = bitwidth.max_safe_k(a, b, "float32")
+    worst = bitwidth.brute_force_worst_sum(a, b, k, fine_grid=True)
+    if k <= k_max:
+        assert worst <= limit
+    if k_max < (1 << 40):
+        assert bitwidth.brute_force_worst_sum(
+            a, b, k_max + 1, fine_grid=True) > limit
+    proof = bitwidth.analyze_matmul(a, b, k, "float32")
+    assert proof.safe == (k <= k_max)
+    assert not proof.wraps  # float accumulators round, never wrap
+
+
+def test_table1_and_zoo_horizons():
+    # The README's quoted numbers: pin them so doc and analyzer agree.
+    assert bitwidth.max_safe_k(Y_VP, W_VP, "float32") == 32
+    assert bitwidth.max_safe_k(Y_VP, W_VP, "int32") == 524287
+    assert bitwidth.max_safe_k(Y_FXP, W_FXP, "float32") == 32
+    assert bitwidth.max_safe_k(Y_FXP, W_FXP, "int32") == 4095
+    zoo = VPFormat(7, (11, 9, 8, 6))
+    assert bitwidth.max_safe_k(zoo, zoo, "float32") == 4
+    assert bitwidth.max_safe_k(zoo, zoo, "int32") == 524287
+
+
+def test_field_and_scale_checks():
+    for fmt in (Y_VP, W_VP):
+        assert bitwidth.check_pack_fields(fmt) == []
+        assert bitwidth.check_scale_exponents(fmt) == []
+    # 2^-200 is below the f32 normal range: denormal/zero dequant scale.
+    assert bitwidth.check_scale_exponents(VPFormat(7, (200, 0)))
+    # 2^+200 overflows to inf.
+    assert bitwidth.check_scale_exponents(VPFormat(7, (0, -200)))
+    # M + E too wide for any packed word is a pack-field violation.
+    assert bitwidth.check_pack_fields(VPFormat(40, (1, -1)))
+    # A huge upshift between FXP grid and a VP option wraps int32.
+    assert bitwidth.check_quantize_shifts(FXPFormat(12, 0),
+                                          VPFormat(7, (40, 0)))
+    assert bitwidth.check_quantize_shifts(W_FXP, W_VP) == []
+
+
+def test_contracts_raise_with_explanation():
+    contracts.require_format_serviceable(W_VP)  # canonical: fine
+    with pytest.raises(VPContractError, match="denormal"):
+        contracts.require_format_serviceable(VPFormat(7, (200, 0)))
+    with pytest.raises(VPContractError, match="wraparound"):
+        contracts.require_quant_safe(FXPFormat(12, 0), VPFormat(7, (40, 0)))
+    # int16 accumulation of 12x12-bit products wraps almost immediately.
+    with pytest.raises(VPContractError, match="OVERFLOWS"):
+        contracts.require_int_accum_safe(W_FXP, W_FXP, 256, accum="int16")
+    # The shipped block-VP config (int32, bk=256) is certified.
+    assert contracts.require_int_accum_safe(Y_VP, W_VP, 256)
+
+
+# ---------------------------------------------------------------------------
+# VMEM footprint model + autotune pruning
+# ---------------------------------------------------------------------------
+
+def test_vmem_model_monotone_and_bounded():
+    fmts = (Y_VP, W_VP)
+    small = vmem.kernel_vmem_bytes("vp_matmul", (64, 64, 64), fmts)
+    big = vmem.kernel_vmem_bytes("vp_matmul", (256, 256, 256), fmts)
+    assert small and big and small < big
+    # The shipped default tilings all fit the real 16 MiB budget...
+    for kernel, fmtseq in [("vp_matmul", fmts), ("vp_matmul_packed", fmts),
+                           ("vp_dequant_matmul", (W_VP,)),
+                           ("vp_quant_matmul", fmts),
+                           ("block_vp_matmul_bk256", fmts)]:
+        ok, need = vmem.vmem_feasible(kernel, (256, 256, 256), fmtseq,
+                                      (4096, 4096, 4096))
+        assert ok, (kernel, need)
+    # ...and absurd tiles do not.
+    ok, need = vmem.vmem_feasible("vp_matmul", (2048, 2048, 2048), fmts)
+    assert not ok and need > vmem.vmem_budget_bytes()
+
+
+def test_vmem_unknown_kernel_never_pruned():
+    assert vmem.kernel_vmem_bytes("mystery_kernel", (1 << 20,) * 3) is None
+    assert vmem.vmem_feasible("mystery_kernel", (1 << 20,) * 3) \
+        == (True, None)
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "12345")
+    assert vmem.vmem_budget_bytes() == 12345
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune._caches.pop(path, None)
+    return path
+
+
+def test_autotune_prunes_infeasible_before_timing(tmp_cache, monkeypatch):
+    # Acceptance criterion: an over-budget candidate is rejected WITHOUT
+    # being timed.  Budget chosen so (64,64,64) fits the
+    # vp_dequant_matmul model (~115 KB) and (256,256,256) (~1.8 MB)
+    # does not.
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", str(200_000))
+    timed = []
+
+    def bench(blocks):
+        timed.append(tuple(blocks))
+
+    best = autotune.tune(
+        "vp_dequant_matmul", (256, 256, 256), (W_VP,), "interpret",
+        bench_fn=bench,
+        candidates=[(256, 256, 256), (64, 64, 64)])
+    assert best == (64, 64, 64)
+    assert (256, 256, 256) not in timed     # pruned, never launched
+    assert (64, 64, 64) in timed
+    # The pruned-in winner was persisted like any tuned entry.
+    key = autotune.make_key(
+        "vp_dequant_matmul", (256, 256, 256), (W_VP,), "interpret")
+    assert autotune.get_cached(key) == (64, 64, 64)
+
+
+def test_autotune_all_infeasible_raises(tmp_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "1000")
+    calls = []
+    with pytest.raises(RuntimeError, match="VMEM budget"):
+        autotune.tune(
+            "vp_dequant_matmul", (256, 256, 256), (W_VP,), "interpret",
+            bench_fn=lambda b: calls.append(b),
+            candidates=[(256, 256, 256), (128, 128, 128)])
+    assert calls == []  # nothing was ever timed
+
+
+# ---------------------------------------------------------------------------
+# Source lint
+# ---------------------------------------------------------------------------
+
+def test_srclint_rules(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text("import os\nimport sys\nprint(sys.path)\n")
+    found = srclint.lint_file(str(p), "mod.py")
+    assert [f["rule"] for f in found] == ["SL-F401"]
+    assert "`os`" in found[0]["detail"]
+
+    init = tmp_path / "__init__.py"
+    init.write_text("import os\n")  # re-export files are exempt
+    assert srclint.lint_file(str(init), "pkg/__init__.py") == []
+
+    launch = tmp_path / "serve.py"
+    launch.write_text("import sys\nassert sys.argv\n")
+    found = srclint.lint_file(str(launch), "launch/serve.py")
+    assert [f["rule"] for f in found] == ["SL-ASSERT"]
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(:\n")
+    assert [f["rule"] for f in
+            srclint.lint_file(str(bad), "bad.py")] == ["SL-SYNTAX"]
+
+
+def test_src_tree_is_clean_of_error_findings(tmp_cache):
+    # The committed tree must carry ZERO error-severity findings in the
+    # non-model checks (model JX-WMAT warns are baselined).  tmp_cache
+    # keeps the VM-CACHE audit off the developer's real autotune cache.
+    findings = rules.run_all(models=False)
+    errors = [f for f in findings if f.severity == "error"]
+    assert errors == [], [str(f) for f in errors]
+    assert all(f.rule in rules.RULES for f in findings)
+
+
+def test_baseline_file_matches_loader():
+    path = rules.default_baseline_path()
+    assert os.path.exists(path)
+    accepted = rules.load_baseline(path)
+    raw = json.load(open(path))
+    assert sorted(accepted) == sorted(raw["accepted"])
+    # Baselined keys are rule|where pairs for rules that exist.
+    for key in accepted:
+        rule, _ = key.split("|", 1)
+        assert rule in rules.RULES
+
+
+# ---------------------------------------------------------------------------
+# Serving failure path (the de-asserted smoke check)
+# ---------------------------------------------------------------------------
+
+def test_serve_finite_check_raises_not_asserts():
+    from repro.launch.serve import _require_finite
+
+    _require_finite(jnp.ones((2, 4)), "prefill")  # finite: no-op
+    with pytest.raises(FloatingPointError, match="non-finite decode"):
+        _require_finite(jnp.array([1.0, float("nan")]), "decode (x, vp)")
+    with pytest.raises(FloatingPointError, match="prefill"):
+        _require_finite(jnp.array([float("inf")]), "prefill (x, vp)")

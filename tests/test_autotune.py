@@ -162,7 +162,7 @@ def test_tune_raises_when_all_candidates_fail(tmp_cache):
     def bench(blocks):
         raise ValueError("mask grid mismatch")
 
-    with pytest.raises(RuntimeError, match="all 2 candidates failed"):
+    with pytest.raises(RuntimeError, match="all 2 feasible candidates failed"):
         autotune.tune(
             "vp_matmul", (32, 32, 32), (W_VP,), "interpret", bench,
             candidates=[(8, 8, 8), (32, 32, 32)], repeats=1)
