@@ -28,6 +28,11 @@ through the `vp_decode_attention` kernel op against the legacy
 dequant-whole-cache planes baseline, swept over cache_len and batch
 (plus a windowed row for the O(window) slice path), attention-output
 parity asserted inline (BENCH_pr5.json records the committed run).
+PR-7 additions: the serving rows — the continuous-batching paged
+engine against the static same-length-batch driver on one calibrated
+Poisson arrival trace (virtual-clock timing, per-request token parity
+asserted inline; BENCH_pr7.json records the committed run).
+
 `--smoke` runs only the sweeps at tiny shapes — a CI
 dispatch check for every kernel execution path (batched/masked x
 fused/unfused x packed/plane, flat/vmap wideband, cold/warm autotune
@@ -429,6 +434,13 @@ def smoke():
                                   n_time=3, window_rows=False) >= 1.0, \
         "packed-KV decode attention lost to the dequant-whole-cache " \
         "baseline"
+    # Paged engine: a tiny mixed trace through the full continuous-
+    # batching path (paged admission, ragged lengths, power-of-two
+    # decode buckets) with engine/static token parity asserted inline —
+    # a dispatch check, not a perf gate (the >=1.5x target is pinned by
+    # the committed BENCH_pr7.json full run).
+    assert engine_serving_bench(smoke=True) > 0, \
+        "paged serving engine failed the smoke trace"
 
 
 def serve_decode_bench(n_steps=8, n_time=5, B=1):
@@ -645,6 +657,215 @@ def decode_attention_bench(cache_lens=(1024, 2048), batches=(1, 4),
     return min_speedup
 
 
+def engine_serving_bench(n_req=12, max_slots=4, smoke=False, seed=0):
+    """PR-7: the continuous-batching paged engine vs the static
+    same-length-batch driver on one staggered (Poisson) arrival trace.
+
+    Same model (VP-quantized weights + packed VP KV cache), same greedy
+    sampling, same per-request token budgets; tokens are asserted
+    identical request-by-request (the engine's full-capacity gathered
+    view is bit-identical to the static B=1 path on the ref backend), so
+    these rows time pure *scheduling*: in-flight batching over a paged
+    cache vs head-of-line same-length batches that cannot ingest
+    arrivals mid-decode.  Both sides charge measured compute to a
+    virtual clock and jump idle arrival gaps, so the derived tokens/sec
+    is a deterministic function of per-step compute, not of sleeps.
+    The arrival process is calibrated off the measured decode step
+    (mean gap = mean_gen * t_step / max_slots — the saturation point of
+    `max_slots` slots), which keeps the trace meaningful across machine
+    speeds."""
+    from repro.configs.base import ModelConfig, QuantConfig
+    from repro.models import (
+        decode_step, init_cache, init_params, prefill, quantize_params,
+    )
+    from repro.serving import ServingEngine, VirtualClock
+
+    quant = QuantConfig(mode="vp", quantize_kv_cache=True,
+                        kv_layout="packed")
+    cfg = ModelConfig(name="engine-bench", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab=512, dtype="float32", quant=quant)
+    params = quantize_params(init_params(jax.random.PRNGKey(seed), cfg),
+                             cfg)
+    if smoke:
+        n_req, max_slots = 4, 2
+        plens = [8 if i % 2 == 0 else 12 for i in range(n_req)]
+        gens = [3 + i % 3 for i in range(n_req)]
+    else:
+        # distinct prompt lengths: real mixed traffic essentially never
+        # repeats an exact length, and the static driver can only batch
+        # requests whose prompts are EXACTLY the same length (its
+        # rectangular prefill has no left-pad mask) — the engine's paged
+        # views batch the mix natively, the static path serializes it.
+        plens = [16 + 2 * i for i in range(n_req)]
+        gens = [16 + (i * 9) % 17 for i in range(n_req)]    # ragged 16..32
+    page_size = 8 if smoke else 16
+    capacity = -(-(max(plens) + max(gens)) // page_size) * page_size
+    total = sum(gens)
+    kp = jax.random.PRNGKey(seed + 1)
+    prompts = [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(kp, i), (plens[i],), 0, cfg.vocab)]
+        for i in range(n_req)]
+
+    # -- engine side (one engine: jit caches survive the warm run) ------
+    eng = ServingEngine(params, cfg, max_slots=max_slots,
+                        capacity=capacity, page_size=page_size,
+                        decode_lookahead=2 if smoke else 4,
+                        clock=VirtualClock())
+
+    def run_engine(arrivals):
+        base = eng.clock.now()
+        for i in range(n_req):
+            eng.submit(prompts[i], gens[i], base + arrivals[i])
+        recs = {r["rid"]: r for r in eng.run()}
+        eng.finished.clear()
+        out = []
+        for rid in sorted(recs)[-n_req:]:   # this wave, submission order
+            r = recs[rid]
+            out.append((r["arrival_time"], r["finish_time"], r["tokens"]))
+        return out
+
+    # -- static side (shared jit caches across warm + timed calls) ------
+    pj, dj = {}, {}
+
+    def _prefill_fn(B, S):
+        if (B, S) not in pj:
+            def f(p, t, c):
+                lg, c2 = prefill(p, t, c, cfg)
+                tok = jnp.argmax(lg.reshape(t.shape[0], -1), -1)
+                return tok.astype(jnp.int32)[:, None], c2
+            pj[(B, S)] = jax.jit(f)
+        return pj[(B, S)]
+
+    def _decode_fn(B):
+        if B not in dj:
+            def f(p, t, c):
+                lg, c2 = decode_step(p, t, c, cfg)
+                tok = jnp.argmax(lg.reshape(t.shape[0], -1), -1)
+                return tok.astype(jnp.int32)[:, None], c2
+            dj[B] = jax.jit(f)
+        return dj[B]
+
+    def run_static(arrivals):
+        """FIFO static batching: serve the head-of-line request together
+        with every waiting SAME-prompt-length request (rectangular batch,
+        up to max_slots), pad generation to the batch max, and only then
+        look at the queue again — the classic driver the engine
+        replaces."""
+        order = sorted(range(n_req), key=lambda i: (arrivals[i], i))
+        now, nxt, pend = 0.0, 0, []
+        toks = [[] for _ in range(n_req)]
+        fin = [0.0] * n_req
+        while nxt < n_req or pend:
+            while nxt < n_req and arrivals[order[nxt]] <= now + 1e-12:
+                pend.append(order[nxt])
+                nxt += 1
+            if not pend:
+                now = max(now, arrivals[order[nxt]])
+                continue
+            head = pend[0]
+            batch = [i for i in pend if plens[i] == plens[head]]
+            batch = batch[:max_slots]
+            for i in batch:
+                pend.remove(i)
+            B, S = len(batch), plens[head]
+            gmax = max(gens[i] for i in batch)
+            caches = init_cache(cfg, B, capacity)
+            tokens = jnp.asarray([prompts[i] for i in batch], jnp.int32)
+            t0 = time.perf_counter()
+            tok, caches = _prefill_fn(B, S)(params, tokens, caches)
+            tok_h = np.asarray(tok)     # one transfer, not B reads
+            now += time.perf_counter() - t0
+            for b, i in enumerate(batch):
+                toks[i].append(int(tok_h[b, 0]))
+                if gens[i] == 1:
+                    fin[i] = now
+            for step in range(1, gmax):
+                t0 = time.perf_counter()
+                tok, caches = _decode_fn(B)(params, tok, caches)
+                tok_h = np.asarray(tok)
+                now += time.perf_counter() - t0
+                for b, i in enumerate(batch):
+                    if step < gens[i]:
+                        toks[i].append(int(tok_h[b, 0]))
+                        if step == gens[i] - 1:
+                            fin[i] = now
+        return [(arrivals[i], fin[i], toks[i]) for i in range(n_req)]
+
+    # -- warm every shape either path can hit, then calibrate -----------
+    zeros = [0.0] * n_req
+    run_engine(zeros)
+    run_static(zeros)
+    # the static driver can only form batches as large as a length
+    # class's multiplicity, so only warm the shapes it can reach
+    b_max = min(max_slots, max(plens.count(p) for p in set(plens)))
+    tok = None
+    for B in range(1, b_max + 1):
+        for S in sorted(set(plens)):
+            c = init_cache(cfg, B, capacity)
+            tk = jnp.zeros((B, S), jnp.int32)
+            tok, c = _prefill_fn(B, S)(params, tk, c)
+        tok, c = _decode_fn(B)(params, tok, c)
+        jax.block_until_ready(tok)
+    # Calibrate off a warmed engine wave: offered load = 2x the engine's
+    # saturated service rate, which keeps BOTH sides compute-bound
+    # (under overload, measured tokens/sec is each side's service
+    # capacity — robust to calibration noise; an arrival-bound trace
+    # would just measure the gaps and push the ratio toward 1).
+    cal = run_engine(zeros)
+    mk_cal = (max(f for _, f, _ in cal)
+              - min(a for a, _, _ in cal))
+    rng = np.random.default_rng(seed)
+    mean_gap = mk_cal / (2 * (n_req - 1))
+    arrivals = [0.0] + [float(a) for a in np.cumsum(
+        rng.exponential(scale=mean_gap, size=n_req - 1))]
+
+    n_time = 1 if smoke else 3
+    eng_waves = [run_engine(arrivals) for _ in range(n_time)]
+    sta_waves = [run_static(arrivals) for _ in range(n_time)]
+    for eng_recs, sta_recs in zip(eng_waves, sta_waves):
+        for i, ((_, _, et), (_, _, st)) in enumerate(
+                zip(eng_recs, sta_recs)):
+            assert len(et) == gens[i], \
+                f"engine made {len(et)} tokens for rid {i}, want {gens[i]}"
+            assert et == st, \
+                f"engine/static token divergence on request {i}: " \
+                f"{et} != {st}"
+
+    def _metrics(recs):
+        t0 = min(a for a, _, _ in recs)
+        t1 = max(f for _, f, _ in recs)
+        lat = sorted(f - a for a, f, _ in recs)
+
+        def pct(p):
+            return lat[min(len(lat) - 1,
+                           max(0, -(-p * len(lat) // 100) - 1))]
+
+        return total / (t1 - t0), t1 - t0, pct(50), pct(99)
+
+    # min-over-repeats at the wave level: each wave charges one-shot
+    # perf_counter readings to the virtual clock, so score each side by
+    # its least-disturbed wave (same convention as the kernel rows).
+    e_tps, e_mk, e_p50, e_p99 = max(
+        (_metrics(w) for w in eng_waves), key=lambda m: m[0])
+    s_tps, s_mk, s_p50, s_p99 = max(
+        (_metrics(w) for w in sta_waves), key=lambda m: m[0])
+    speedup = e_tps / s_tps
+    tag = (f"slots={max_slots};page={page_size};cap={capacity};"
+           f"mean_gap_us={mean_gap * 1e6:.0f}")
+    emit("engine_poisson_vp_packed", e_mk * 1e6 / total,
+         f"tokens_per_s={e_tps:.1f};p50_s={e_p50:.4f};"
+         f"p99_s={e_p99:.4f};{tag}")
+    emit("static_poisson_vp_packed", s_mk * 1e6 / total,
+         f"tokens_per_s={s_tps:.1f};p50_s={s_p50:.4f};"
+         f"p99_s={s_p99:.4f};{tag}")
+    emit("engine_vs_static_serving", e_mk * 1e6 / total,
+         f"engine_vs_static_x{speedup:.2f};{n_req} Poisson arrivals, "
+         f"ragged prompts+gens;tokens bit-identical per request")
+    return speedup
+
+
 def cspade_tile_stats(ens):
     """Tile-level CSPADE muting on real beamspace stimuli (TPU adaptation).
 
@@ -705,6 +926,11 @@ def main() -> None:
         assert min_x > 1.0, \
             f"packed-KV decode attention must beat the dequant-whole-" \
             f"cache baseline at every swept (B, cache_len); got {min_x:.2f}x"
+        eng_x = engine_serving_bench()    # continuous-batching engine
+        assert eng_x >= 1.5, \
+            f"continuous-batching engine must reach >=1.5x aggregate " \
+            f"tokens/sec over the static driver on staggered arrivals; " \
+            f"got {eng_x:.2f}x"
 
     if args.json:
         with open(args.json, "w") as f:

@@ -28,12 +28,18 @@ cost speed, never correctness.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import json
 import os
 import threading
 import time
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+try:  # POSIX advisory file lock; absent on some platforms (Windows)
+    import fcntl
+except ImportError:  # pragma: no cover
+    fcntl = None
 
 from repro.analysis import vmem as _vmem
 
@@ -86,6 +92,32 @@ def _save(path: str, data: Dict[str, list]) -> None:
     os.replace(tmp, path)
 
 
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Cross-process advisory lock serializing read-merge-write cycles.
+
+    Locks a sidecar `<path>.lock` (never the data file itself — the data
+    file is replaced by rename, which would orphan a lock on its inode).
+    Without it, two PROCESSES could interleave between `record`'s re-read
+    and its rename and one would silently drop the other's entries; the
+    `threading.Lock` only serializes threads within one process.
+    No-ops where `fcntl` is unavailable (back to the narrow-window
+    best-effort behavior).
+    """
+    if fcntl is None:
+        yield
+        return
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(f"{path}.lock", "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
 def clear_cache() -> None:
     """Drop the cache file and the in-memory layer (cold start)."""
     path = cache_path()
@@ -122,16 +154,16 @@ def get_cached(key: str) -> Optional[Blocks]:
 def record(key: str, blocks: Blocks) -> None:
     """Persist one entry, merging with what is on disk RIGHT NOW.
 
-    Concurrent tuners each write the union of the current file and their
-    own entries (read-merge-write under the process lock + atomic
-    rename).  The re-read narrows the lost-update window to the gap
-    between our read and our rename — a peer's write landing exactly in
-    that gap can still be dropped (no cross-process file lock); losing
-    an entry only costs a re-tune, never correctness.
+    The read-merge-write cycle runs under BOTH the thread lock (peers in
+    this process) and a cross-process `flock` on a sidecar lock file
+    (peer serving/tuning processes sharing the cache), then writes via
+    temp-file + `os.replace`.  Concurrent writers therefore each persist
+    the union — no interleaving can drop a peer's entries or leave a
+    torn file.
     """
     path = cache_path()
     mem = _load(path)
-    with _lock:
+    with _lock, _file_lock(path):
         fresh: Dict[str, list] = {}
         try:
             with open(path) as f:

@@ -1,0 +1,70 @@
+"""Block-table-aware page ops for the paged packed-KV cache.
+
+A paged cache stores every sequence buffer as a pool of FIXED-SIZE pages
+(`(reps, n_pages, page_size, *tail)`); a request owns an ordered list of
+page ids (its block-table row) instead of a contiguous span.  Admission
+and eviction are then pure metadata — pages change owner by index, and
+the packed VP words inside them are NEVER copied or dequantized when
+requests come and go.
+
+These ops are the only code that touches the pool layout:
+
+  * `gather_pages`    — block table -> contiguous per-request view
+                        (what `vp_decode_attention` / the jnp ref core
+                        consume, masked by the scalar-prefetched
+                        per-request `lengths`)
+  * `scatter_pages`   — write whole pages (prefill commits a prompt)
+  * `scatter_positions` — write single positions (decode commits one
+                        token per request; chunked prefill commits a
+                        chunk that may straddle pages)
+
+On the jnp/ref backend these lower to one XLA gather / scatter over the
+page axis.  On the TPU-native backend the same block-table row becomes
+the scalar-prefetch argument of the Pallas decode kernel (the kernel
+DMAs pages by id instead of gathering a contiguous view in HBM first) —
+that lowering rides the existing `vp_decode_attention` grid and is
+tracked in ROADMAP open item 1's follow-up; every caller goes through
+this module so the swap is local.
+
+Page 0 is reserved as the DUMMY page: free-list allocation never hands
+it out, and masked writes (inactive batch rows) land there.  Nothing
+ever reads it back — tests poison it to prove that.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_pages(pool, page_ids):
+    """Pool view through a block table.
+
+    pool (reps, n_pages, page_size, *tail), page_ids (B, P) int32 ->
+    (reps, B, P * page_size, *tail): request b's pages concatenated in
+    block-table order — a contiguous cache view whose positions
+    [0, lengths[b]) are valid.
+    """
+    reps, _, ps = pool.shape[:3]
+    B, P = page_ids.shape
+    g = pool[:, page_ids]                      # (reps, B, P, ps, *tail)
+    return g.reshape(reps, B, P * ps, *pool.shape[3:])
+
+
+def scatter_pages(pool, page_ids, values):
+    """Write whole pages (one request's prefill commit).
+
+    page_ids (P,) int32, values (reps, P * page_size, *tail) -> pool'.
+    """
+    reps, _, ps = pool.shape[:3]
+    P = page_ids.shape[0]
+    v = values.reshape(reps, P, ps, *pool.shape[3:])
+    return pool.at[:, page_ids].set(v)
+
+
+def scatter_positions(pool, page_ids, offsets, values):
+    """Write single in-page positions (decode / chunked-prefill commit).
+
+    page_ids (N,) int32 (page per position — duplicates allowed only on
+    the dummy page 0), offsets (N,) int32 in [0, page_size), values
+    (reps, N, *tail) -> pool'.
+    """
+    return pool.at[:, page_ids, offsets].set(values)

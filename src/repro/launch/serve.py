@@ -1,4 +1,4 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Serving CLI: static batch driver + continuous-batching paged engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 32 --gen 32 --quant vp
@@ -8,25 +8,31 @@ significand + exponent index in one int8/int16 per element,
 `core.packing`), and every weight matmul routes through the Pallas
 `vp_dequant_matmul` kernel — the packed words are consumed directly
 in-tile, never materializing an f32 weight matrix in HBM.  This is the
-paper's technique as a serving feature; the MIMO equalizer and LLM decode
-now exercise the same kernel substrate.
+paper's technique as a serving feature.
 
+  --engine          serve via the continuous-batching PAGED engine
+                    (`repro.serving`): fixed-size pages of packed VP
+                    words + per-request block tables, FIFO admission
+                    under the page budget, interleaved prefill/decode.
+                    The static path (default) is retained as the parity
+                    oracle — on the ref backend both emit bit-identical
+                    tokens.
   --layout planes   legacy two-plane jnp-dequant serving (the golden
                     baseline the parity suite pins the kernel against)
   --kv-quant        additionally VP-quantizes the KV cache into PACKED
                     words consumed by the `vp_decode_attention` kernel
-                    (unpack + pow2 scale in-tile, cache_len-aware tile
-                    skip — the whole-cache dequant is gone)
-  --kv-layout planes  legacy two-plane KV cache, dequantized whole in
-                    jnp every step (the golden packed-cache baseline)
-  --tune-decode     run the M=1..B skinny-decode autotune profile over the
-                    model's weight panels — and, with --kv-quant, the
-                    decode-attention cache geometries — before serving
-                    (persisted in the autotune cache, so later launches
-                    hit measured tilings)
-  --json F          write a serving report (tokens/sec, packed bytes) to F
+  --kv-layout planes  legacy two-plane KV cache (golden baseline)
+  --tune-decode     run the M=1..B skinny-decode autotune profile over
+                    the model's weight panels (and, with --kv-quant, the
+                    decode-attention cache geometries) before serving
+  --json F          write a serving report (tokens/sec, latency) to F
   --smoke           reduced config; also CHECKS finite logits end to end
                     (a real raise, not an assert — survives `python -O`)
+
+All wall-clock numbers come from `time.perf_counter()` — never
+`time.time()`, whose NTP steps skewed the committed tokens/sec reports —
+and token sampling happens INSIDE the jitted decode step, so "decode
+time" measures the model, not a host-side Python sampling loop.
 """
 from __future__ import annotations
 
@@ -43,6 +49,7 @@ from repro.models import (
     init_params, init_cache, prefill, decode_step, quantize_params,
 )
 from repro.models.layers import canonical_formats
+from repro.serving.profile import quantized_bytes, tune_decode_profile
 
 
 def _require_finite(logits, what: str) -> None:
@@ -56,131 +63,133 @@ def _require_finite(logits, what: str) -> None:
         raise FloatingPointError(f"non-finite {what} logits")
 
 
-def _quantized_bytes(params) -> int:
-    """Bytes of integer serving storage (packed words / significand and
-    index planes; float32 scale tensors are NOT counted)."""
-    return int(sum(
-        l.size * l.dtype.itemsize
-        for l in jax.tree_util.tree_leaves(params)
-        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.integer)))
+def _percentile(xs, p: float) -> float:
+    """Nearest-rank percentile of a small latency list."""
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(p / 100 * (len(ys) - 1)))))
+    return ys[i]
 
 
-def _weight_panels(params):
-    """Distinct (d_in, d_out) of every packed weight that feeds the
-    serving matmul.
-
-    The embedding table is excluded: it is consumed by `embed_lookup` as
-    a row GATHER, never by `vp_dequant_matmul` — tuning a (vocab, d)
-    panel would burn vocab-sized benchmark matmuls and persist cache
-    entries nothing reads (lm_head's (d, vocab) panel is the real one).
-    """
-    panels = set()
-
-    def walk(node, name=""):
-        if isinstance(node, dict):
-            if "w_packed" in node:
-                if name != "embed":
-                    w = node["w_packed"]
-                    panels.add((int(w.shape[-2]), int(w.shape[-1])))
-                return
-            for k, v in node.items():
-                walk(v, k)
-        elif isinstance(node, list):
-            for v in node:
-                walk(v, name)
-
-    walk(params)
-    return sorted(panels)
+def _ragged_gens(gen: int, n: int):
+    """Deterministic ragged generation lengths in [gen/2, gen]."""
+    span = max(1, gen // 2)
+    return [max(1, gen - (i * 7) % (span + 1)) for i in range(n)]
 
 
-def _attn_cache_geometries(cfg, max_len: int):
-    """Distinct decode-attention cache geometries of the model's layer
-    plan: (buf_len, window, rolling) per attention pattern — exactly the
-    shapes `attn_block` will launch `vp_decode_attention` with."""
-    from repro.models.model import layer_groups
+def _run_engine(args, params, cfg, prompt_key, report):
+    """Serve --batch requests through the paged continuous-batching
+    engine (deterministic virtual clock charged with measured compute)."""
+    from repro.serving import ServingEngine, VirtualClock
 
-    shapes = set()
-    for group in layer_groups(cfg):
-        for pattern in group.patterns:
-            if pattern in ("mamba", "rwkv"):
-                continue
-            window = (cfg.sliding_window if pattern in ("swa", "moe_swa")
-                      else (cfg.local_window if pattern == "local"
-                            else None))
-            buf_len = min(max_len, window) if window else max_len
-            rolling = window is not None and buf_len <= window
-            shapes.add((buf_len, window or 0, rolling))
+    n_req = args.batch
+    gens = _ragged_gens(args.gen, n_req) if args.ragged_gen \
+        else [args.gen] * n_req
+    if args.arrival_gap > 0:
+        arrivals = [i * args.arrival_gap for i in range(n_req)]
+    else:
+        arrivals = [0.0] * n_req
+    ps = args.page_size
+    capacity = -(-(args.prompt_len + max(gens)) // ps) * ps
+    max_slots = args.max_slots or min(n_req, 4)
+    engine = ServingEngine(
+        params, cfg, max_slots=max_slots, capacity=capacity, page_size=ps,
+        prefill_chunk=args.prefill_chunk, temperature=args.temperature,
+        decode_lookahead=args.lookahead,
+        clock=VirtualClock(), check_finite=args.smoke,
+        hbm_budget_bytes=args.hbm_budget or None)
+    for i in range(n_req):
+        prompt = jax.random.randint(
+            jax.random.fold_in(prompt_key, i), (args.prompt_len,), 0,
+            cfg.vocab)
+        engine.submit([int(t) for t in prompt], gens[i], arrivals[i])
+    recs = engine.run()
+    total_tokens = sum(len(r["tokens"]) for r in recs)
+    makespan = max(r["finish_time"] for r in recs) \
+        - min(r["arrival_time"] for r in recs)
+    lats = [r["finish_time"] - r["arrival_time"] for r in recs]
+    tok_s = total_tokens / max(makespan, 1e-9)
+    report.update({
+        "mode": "engine", "n_requests": n_req, "max_slots": max_slots,
+        "page_size": ps, "capacity": capacity,
+        "prefill_chunk": args.prefill_chunk,
+        "decode_lookahead": args.lookahead,
+        "hbm_cache_bytes": engine.kv.hbm_bytes(),
+        "total_tokens": total_tokens, "makespan_s": makespan,
+        "tokens_per_s": tok_s,
+        "p50_latency_s": _percentile(lats, 50),
+        "p99_latency_s": _percentile(lats, 99),
+    })
+    print(f"[engine] {n_req} requests x {max_slots} slots "
+          f"(pages of {ps}): {total_tokens} tokens in {makespan:.2f}s "
+          f"({tok_s:.1f} tok/s, p50 {report['p50_latency_s']:.2f}s, "
+          f"p99 {report['p99_latency_s']:.2f}s)")
+    print("[sample tokens]", [r["tokens"][:8] for r in recs[:4]])
+
+
+def _run_static(args, params, cfg, prompt_key, sample_key, report):
+    """The original fixed-batch driver: prefill once, decode N steps.
+    Kept as the engine's parity oracle and padding-loss baseline."""
+    B = args.batch
+    prompts = jax.random.randint(
+        prompt_key, (B, args.prompt_len), 0, cfg.vocab)
+    caches = init_cache(cfg, B, args.prompt_len + args.gen)
+
+    extra = None
+    cross_kv = None
+    if cfg.family == "vlm":
+        extra = jnp.zeros((B, cfg.n_patches, cfg.d_model), jnp.float32)
     if cfg.family == "encdec":
-        shapes.add((max_len, 0, False))
-    return sorted(shapes)
+        from repro.models.model import _encoder_forward, _cross_kv
+        frames = jax.random.normal(
+            jax.random.fold_in(prompt_key, 1),
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        enc = _encoder_forward(params, frames, cfg)
+        cross_kv = _cross_kv(params, enc, cfg)
+        extra = cross_kv
 
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, prompts, caches, cfg, patches=extra)
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+    report["prefill_s"] = prefill_s
+    print(f"[prefill] {B}x{args.prompt_len} in {prefill_s:.2f}s")
+    if args.smoke:
+        _require_finite(logits, f"prefill ({args.arch}, {args.quant})")
 
-def tune_decode_profile(params, cfg, batch: int, max_len: int = 0,
-                        seed: int = 0):
-    """Tune the serving kernels this process will launch at decode.
+    temperature = args.temperature
 
-    Weight panels: `vp_dequant_matmul` at every M = 1..batch (persisted
-    per (M, K, N)).  With a VP-quantized packed KV cache, ALSO profiles
-    `vp_decode_attention` over the model's cache geometries (buf_len,
-    window, rolling) at batch `batch` — the attention tile cache key
-    includes the masking regime, so each geometry tunes separately.
-    """
-    from repro.kernels import autotune, ops, substrate
-    from repro.core.packing import storage_dtype
+    @jax.jit
+    def decode(p, t, c, key):
+        if cfg.family == "encdec":
+            lg, c = decode_step(p, t, c, cfg, cross_kv=cross_kv)
+        else:
+            lg, c = decode_step(p, t, c, cfg)
+        # Sampling INSIDE the jitted step: the decode timer must not
+        # include a host round-trip + Python argmax per token.
+        if temperature > 0:
+            nxt = jax.random.categorical(key, lg / temperature)
+        else:
+            nxt = jnp.argmax(lg, -1)
+        return nxt.astype(jnp.int32)[:, None], lg, c
 
-    _, vp = canonical_formats(cfg.quant)
-    backend = substrate.resolve_backend(None)
-    if backend == "ref":
-        # The ref path's math is tile-independent and never reads the
-        # cache — measuring candidates here would record pure timer
-        # noise and burn minutes of model-size matmuls for nothing.
-        print("[serve] decode autotune profile skipped: backend is the "
-              "jnp ref (blocks only affect kernel backends)")
-        return {}
-    key = jax.random.PRNGKey(seed)
-    sizes = tuple(sorted({1 << p for p in range(batch.bit_length())
-                          if (1 << p) <= batch} | {batch}))
-    profile = {}
-    for K, N in _weight_panels(params):
-        w = jax.random.randint(
-            key, (K, N), -8, 8).astype(storage_dtype(vp))
-        x_full = jax.random.normal(key, (max(sizes), K), jnp.float32)
-
-        def bench(M, blocks, w=w, x_full=x_full):
-            jax.block_until_ready(ops.vp_dequant_matmul(
-                x_full[:M], w, vp, blocks=blocks))
-
-        profile[(K, N)] = autotune.tune_serving_decode(
-            "vp_dequant_matmul", K, N, (vp,), backend, bench,
-            batch_sizes=sizes)
-    if cfg.quant.quantize_kv_cache and cfg.quant.kv_layout == "packed" \
-            and max_len:
-        from repro.models.attention import kv_cache_formats
-
-        _, kv_vp = kv_cache_formats(cfg.quant)
-        KV, dh, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
-        for buf_len, window, rolling in _attn_cache_geometries(cfg,
-                                                               max_len):
-            kw = jax.random.randint(
-                key, (batch, buf_len, KV, dh), -8, 8
-            ).astype(storage_dtype(kv_vp))
-            ks = jnp.ones((batch, buf_len, 1, 1), jnp.float32)
-            q = jax.random.normal(key, (batch, 1, H, dh), jnp.float32)
-            lens = jnp.full((batch,), buf_len, jnp.int32)
-            win = window or None
-
-            def bench_attn(blocks, kw=kw, ks=ks, q=q, lens=lens, win=win,
-                           rolling=rolling):
-                jax.block_until_ready(ops.vp_decode_attention(
-                    q, kw, kw, ks, ks, lens, kv_vp, window=win,
-                    rolling=rolling, blocks=blocks))
-
-            shape = (batch, buf_len, KV, dh, window, int(rolling))
-            profile[("attn",) + shape] = autotune.tune(
-                "vp_decode_attention", shape, (kv_vp,), backend,
-                bench_attn,
-                candidates=autotune.attn_candidates(H // KV, buf_len))
-    return profile
+    out_tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        out_tokens.append(tok)
+        tok, logits, caches = decode(
+            params, tok, caches, jax.random.fold_in(sample_key, i))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    if args.smoke:
+        _require_finite(logits, f"decode ({args.arch}, {args.quant})")
+    gen = jnp.concatenate(out_tokens, axis=1)
+    tok_s = B * args.gen / dt
+    report["decode_s"] = dt
+    report["tokens_per_s"] = tok_s
+    print(f"[decode] {args.gen} steps x batch {B}: {dt:.2f}s "
+          f"({tok_s:.1f} tok/s)")
+    print("[sample tokens]", np_preview(gen))
 
 
 def main():
@@ -218,6 +227,35 @@ def main():
     ap.add_argument("--json", default=None, metavar="FILE",
                     help="write a serving report (tokens/sec) to FILE")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    # Continuous-batching engine mode
+    ap.add_argument("--engine", action="store_true",
+                    help="serve --batch requests through the paged "
+                         "continuous-batching engine instead of one "
+                         "static batch")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="concurrent requests resident in the paged "
+                         "cache (default min(batch, 4))")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache positions per page")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="fused decode run-ahead: decode this many "
+                         "tokens per jitted dispatch (one gather + one "
+                         "scatter amortized over the steps; tokens are "
+                         "bit-identical to --lookahead 1)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompt prefill into chunks of this many "
+                         "tokens interleaved with decode steps "
+                         "(full-causal models only)")
+    ap.add_argument("--ragged-gen", action="store_true",
+                    help="engine mode: vary per-request generation "
+                         "lengths (deterministic ragged traffic)")
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    help="engine mode: stagger request arrivals by this "
+                         "many virtual seconds")
+    ap.add_argument("--hbm-budget", type=int, default=0,
+                    help="engine mode: HBM byte budget sizing the page "
+                         "pool (0 = fully committed)")
     args = ap.parse_args()
 
     quant = QuantConfig(mode=args.quant, M=args.M, E=args.E,
@@ -226,8 +264,11 @@ def main():
                         kv_layout=args.kv_layout)
     cfg = (registry.get_smoke_config(args.arch, quant) if args.smoke
            else registry.get_config(args.arch, quant))
-    key = jax.random.PRNGKey(0)
-    params = init_params(key, cfg)
+    # Independent streams: model init, prompt draws, and sampling must
+    # never share a key (weights correlated with benchmark activations).
+    k_params, k_prompt, k_sample = jax.random.split(
+        jax.random.PRNGKey(args.seed), 3)
+    params = init_params(k_params, cfg)
     report = {"arch": args.arch, "quant": args.quant, "layout": args.layout,
               "kv_quant": bool(args.kv_quant), "kv_layout": args.kv_layout,
               "smoke": bool(args.smoke), "batch": args.batch,
@@ -240,7 +281,7 @@ def main():
               "kernel-backed decode attention")
     if args.quant != "none":
         params = quantize_params(params, cfg, layout=args.layout)
-        qbytes = _quantized_bytes(params)
+        qbytes = quantized_bytes(params)
         report["quantized_bytes"] = qbytes
         if args.quant == "vp" and args.layout == "packed":
             _, vp = canonical_formats(cfg.quant)
@@ -254,7 +295,7 @@ def main():
     tunable = (args.quant == "vp" and args.layout == "packed") or \
         (args.kv_quant and args.kv_layout == "packed")
     if args.tune_decode and tunable:
-        t0 = time.time()
+        t0 = time.perf_counter()
         prof = tune_decode_profile(
             params, cfg, args.batch,
             max_len=args.prompt_len + args.gen)
@@ -264,62 +305,12 @@ def main():
                 for v in prof.values())
             print(f"[serve] decode autotune profile: "
                   f"{n_entries} entries over "
-                  f"{len(prof)} shapes in {time.time()-t0:.1f}s")
+                  f"{len(prof)} shapes in {time.perf_counter()-t0:.1f}s")
 
-    B = args.batch
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
-    caches = init_cache(cfg, B, args.prompt_len + args.gen)
-
-    extra = None
-    cross_kv = None
-    if cfg.family == "vlm":
-        extra = jnp.zeros((B, cfg.n_patches, cfg.d_model), jnp.float32)
-    if cfg.family == "encdec":
-        from repro.models.model import _encoder_forward, _cross_kv
-        frames = jax.random.normal(
-            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
-        enc = _encoder_forward(params, frames, cfg)
-        cross_kv = _cross_kv(params, enc, cfg)
-        extra = cross_kv
-
-    t0 = time.time()
-    logits, caches = prefill(params, prompts, caches, cfg, patches=extra)
-    jax.block_until_ready(logits)
-    prefill_s = time.time() - t0
-    report["prefill_s"] = prefill_s
-    print(f"[prefill] {B}x{args.prompt_len} in {prefill_s:.2f}s")
-    if args.smoke:
-        _require_finite(
-            logits, f"prefill ({args.arch}, {args.quant})")
-
-    decode = jax.jit(
-        lambda p, t, c: decode_step(p, t, c, cfg, cross_kv=cross_kv)
-        if cfg.family == "encdec" else decode_step(p, t, c, cfg))
-
-    out_tokens = []
-    tok = jnp.argmax(logits, -1)[:, None]
-    t0 = time.time()
-    for i in range(args.gen):
-        out_tokens.append(tok)
-        logits, caches = decode(params, tok, caches)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits, -1)[:, None]
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    if args.smoke:
-        _require_finite(
-            logits, f"decode ({args.arch}, {args.quant})")
-    gen = jnp.concatenate(out_tokens, axis=1)
-    tok_s = B * args.gen / dt
-    report["decode_s"] = dt
-    report["tokens_per_s"] = tok_s
-    print(f"[decode] {args.gen} steps x batch {B}: {dt:.2f}s "
-          f"({tok_s:.1f} tok/s)")
-    print("[sample tokens]", np_preview(gen))
+    if args.engine:
+        _run_engine(args, params, cfg, k_prompt, report)
+    else:
+        _run_static(args, params, cfg, k_prompt, k_sample, report)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)

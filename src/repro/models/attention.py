@@ -244,6 +244,36 @@ def _cache_buf(cache: dict):
             return cache[key]
     raise KeyError(f"unrecognized KV cache layout: {sorted(cache)}")
 
+
+def _chunked_prefill_attention(qp, k_all, v_all, offset, hist_len: int):
+    """Causal attention of a prompt chunk against cache history + itself.
+
+    qp (B, S, H, dh) is the chunk's queries; k_all/v_all (B, hist_len+S,
+    KV, dh) are the dequantized cache history concatenated with the
+    chunk's own K/V.  offset (B,) is the valid history span: history
+    position t contributes iff t < offset, chunk position c iff c <= s
+    (intra-chunk causality).  Everything past offset is masked to
+    NEG_INF, so garbage in unwritten cache slots cannot leak.
+    """
+    B, S, H, dh = qp.shape
+    KV = k_all.shape[2]
+    G = H // KV
+    qr = qp.reshape(B, S, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr,
+                        k_all.astype(jnp.float32))
+    t = jnp.arange(k_all.shape[1], dtype=jnp.int32)[None, None, :]
+    s_idx = jnp.arange(S, dtype=jnp.int32)[None, :, None]
+    mask = (t < offset[:, None, None]) | \
+        ((t >= hist_len) & (t - hist_len <= s_idx))      # (B, S, T)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgst,btkd->bskgd", p / jnp.maximum(l, 1e-30),
+                     v_all.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(qp.dtype)
+
+
 def attn_block(
     x, params, cfg: ModelConfig,
     positions,
@@ -252,6 +282,7 @@ def attn_block(
     cache: Optional[dict] = None,
     train: bool = False,
     kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+    chunked: bool = False,
 ):
     """Self/cross attention block.
 
@@ -260,6 +291,13 @@ def attn_block(
     (kernel-consumed, default) / legacy planes {"k_m", "k_i", "k_s", ...}
     -> returns (out, new_cache).  kv_override supplies precomputed
     encoder K/V for cross-attention.
+
+    chunked: the multi-token input is a prompt CHUNK appended at offset
+    `cache["len"]` (continuous-batching prefill) rather than the start
+    of an empty cache — the chunk attends to the already-written history
+    plus itself, and its K/V are written at the offset.  Full-causal
+    caches only (a rolling ring's chunk writes would need wraparound
+    bookkeeping no caller exercises).
     """
     q_cfg = cfg.quant
     B = x.shape[0]
@@ -290,6 +328,61 @@ def attn_block(
         kp = rope(kp, positions, cfg.rope_theta)
 
     new_cache = None
+    if cache is not None and kv_override is None and x.shape[1] > 1 \
+            and chunked:
+        # CHUNKED PREFILL: this chunk's queries attend to the valid
+        # cache history (dequantized once per chunk — O(chunk * hist)
+        # like any prefill, unlike the per-token decode path which never
+        # dequantizes the whole cache) plus the chunk itself; the
+        # chunk's K/V append at offset `len` via the same per-position
+        # quantization the one-shot path uses.
+        if window is not None:
+            raise NotImplementedError(
+                "chunked prefill over rolling/windowed caches is not "
+                "implemented; use whole-prompt prefill")
+        S = x.shape[1]
+        smax = _cache_buf(cache).shape[1]
+        idx = cache["len"]  # (B,)
+        if "k_w" in cache:
+            k_hist = dequantize_kv_packed(cache["k_w"], cache["k_s"],
+                                          q_cfg, kp.dtype)
+            v_hist = dequantize_kv_packed(cache["v_w"], cache["v_s"],
+                                          q_cfg, vp_.dtype)
+        elif "k_m" in cache:
+            k_hist = dequantize_kv(cache["k_m"], cache["k_i"],
+                                   cache["k_s"], q_cfg, kp.dtype)
+            v_hist = dequantize_kv(cache["v_m"], cache["v_i"],
+                                   cache["v_s"], q_cfg, vp_.dtype)
+        else:
+            k_hist, v_hist = cache["k"].astype(kp.dtype), \
+                cache["v"].astype(vp_.dtype)
+        k_all = jnp.concatenate([k_hist, kp.astype(k_hist.dtype)], axis=1)
+        v_all = jnp.concatenate([v_hist, vp_.astype(v_hist.dtype)], axis=1)
+        out = _chunked_prefill_attention(qp, k_all, v_all, idx, smax)
+        upd = lambda buf, val: jax.vmap(
+            lambda b, v, j: jax.lax.dynamic_update_slice_in_dim(
+                b, v, j, axis=0))(buf, val, idx)
+        if "k_w" in cache:
+            w_k, s_k = quantize_kv(kp, q_cfg)
+            w_v, s_v = quantize_kv(vp_, q_cfg)
+            new_cache = dict(
+                k_w=upd(cache["k_w"], w_k), k_s=upd(cache["k_s"], s_k),
+                v_w=upd(cache["v_w"], w_v), v_s=upd(cache["v_s"], s_v),
+                len=idx + S)
+        elif "k_m" in cache:
+            m_k, i_k, s_k = quantize_kv(kp, q_cfg, layout="planes")
+            m_v, i_v, s_v = quantize_kv(vp_, q_cfg, layout="planes")
+            new_cache = dict(
+                k_m=upd(cache["k_m"], m_k), k_i=upd(cache["k_i"], i_k),
+                k_s=upd(cache["k_s"], s_k),
+                v_m=upd(cache["v_m"], m_v), v_i=upd(cache["v_i"], i_v),
+                v_s=upd(cache["v_s"], s_v), len=idx + S)
+        else:
+            new_cache = dict(k=upd(cache["k"], kp.astype(cache["k"].dtype)),
+                             v=upd(cache["v"], vp_.astype(cache["v"].dtype)),
+                             len=idx + S)
+        out = out.reshape(*x.shape[:-1], H * dh)
+        return qdot(out, params["wo"], q_cfg, train), new_cache
     if cache is not None and kv_override is None and x.shape[1] > 1:
         # PREFILL: full causal pass over the prompt, then write all S
         # positions into the cache in one shot.

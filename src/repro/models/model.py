@@ -298,7 +298,7 @@ def _sp_gather(x, cfg: ModelConfig):
 
 
 def _apply_sublayer(x, p, cfg: ModelConfig, pattern: str, positions,
-                    cache=None, train: bool = False):
+                    cache=None, train: bool = False, chunked: bool = False):
     """Returns (x, new_cache, aux) — aux is (2,) f32 [load_balance, z]."""
     zero_aux = jnp.zeros((2,), jnp.float32)
     if pattern == "rwkv":
@@ -326,7 +326,8 @@ def _apply_sublayer(x, p, cfg: ModelConfig, pattern: str, positions,
     }[pattern]
     h, new_cache = attn_block(
         _sp_gather(rms_norm(x, p["ln1"]), cfg), p["attn"], cfg, positions,
-        pattern=pat, window=window, cache=cache, train=train)
+        pattern=pat, window=window, cache=cache, train=train,
+        chunked=chunked)
     x = x + h
     aux = zero_aux
     if pattern in ("moe", "moe_swa"):
@@ -375,7 +376,7 @@ def _maybe_shard_seq(x, cfg: ModelConfig):
 
 
 def _scan_group(x, group_params, cfg, patterns, positions, shared=None,
-                caches=None, train=False):
+                caches=None, train=False, chunked=False):
     """Scan a homogeneous group of layers.
 
     group_params: {"sub{j}": stacked-params} (leading axis = repeats).
@@ -392,7 +393,8 @@ def _scan_group(x, group_params, cfg, patterns, positions, shared=None,
             p_sub = shared if pattern == "shared_attn" else p_layer[f"sub{j}"]
             c_in = None if cache_layer is None else cache_layer.get(f"sub{j}")
             h, c_out, aux = _apply_sublayer(
-                h, p_sub, cfg, pattern, positions, cache=c_in, train=train)
+                h, p_sub, cfg, pattern, positions, cache=c_in, train=train,
+                chunked=chunked)
             aux_acc = aux_acc + aux
             if c_in is not None:
                 new_caches[f"sub{j}"] = c_out
@@ -476,7 +478,7 @@ def _decoder_backbone(params, x, cfg: ModelConfig, positions, cross_kv,
 
 
 def _lm_backbone(params, x, cfg: ModelConfig, positions, caches=None,
-                 train=False):
+                 train=False, chunked=False):
     """Run all scanned groups.  caches: list aligned with groups or None."""
     shared = params.get("shared_attn")
     new_caches = []
@@ -485,7 +487,7 @@ def _lm_backbone(params, x, cfg: ModelConfig, positions, caches=None,
         c_in = None if caches is None else caches[gi]
         x, c_out, a = _scan_group(
             x, params["groups"][gi], cfg, group.patterns, positions,
-            shared=shared, caches=c_in, train=train)
+            shared=shared, caches=c_in, train=train, chunked=chunked)
         new_caches.append(c_out)
         aux = aux + a
     return x, new_caches, aux
@@ -678,17 +680,26 @@ def _decode_positions(caches, cfg):
     return jnp.zeros((B, 1), jnp.int32)
 
 
-def prefill(params, tokens, caches, cfg: ModelConfig, patches=None):
+def prefill(params, tokens, caches, cfg: ModelConfig, patches=None,
+            chunked=False):
     """Prefill the caches with a full prompt — ONE batched causal pass.
 
     Attention layers write all S key/values into their caches; SSM layers
     run the chunked scan and keep the final state.  Returns
     (last-position logits (B, V), filled caches).
+
+    chunked: `tokens` is a prompt CHUNK continuing already-prefilled
+    caches (continuous batching) — positions offset by the cache length,
+    attention layers append at that offset, SSM states carry forward.
     """
     dtype = model_dtype(cfg)
     B, S = tokens.shape
+    if chunked and cfg.family == "encdec":
+        raise ValueError("chunked prefill is not supported for encdec")
     x = embed_lookup(tokens, params["embed"], cfg.quant).astype(dtype)
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if chunked:
+        positions = _decode_positions(caches, cfg) + positions
     if cfg.family == "vlm" and patches is not None:
         pp = qdot(patches.astype(dtype), params["patch_proj"], cfg.quant)
         x = jnp.concatenate([pp, x], axis=1)
@@ -705,7 +716,8 @@ def prefill(params, tokens, caches, cfg: ModelConfig, patches=None):
         x = rms_norm(x, params["final_norm"])
         logits = qdot(x[:, -1], params["lm_head"], cfg.quant)
         return logits.astype(jnp.float32), [dec_caches]
-    x, new_caches, _ = _lm_backbone(params, x, cfg, positions, caches=caches)
+    x, new_caches, _ = _lm_backbone(params, x, cfg, positions, caches=caches,
+                                    chunked=chunked)
     x = rms_norm(x, params["final_norm"])
     logits = qdot(x[:, -1], params["lm_head"], cfg.quant)
     return logits.astype(jnp.float32), new_caches

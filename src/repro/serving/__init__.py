@@ -1,0 +1,12 @@
+"""Continuous-batching VP serving: paged cache, scheduler, runner, engine."""
+from .page_cache import PagedKVCache, SubSpec, plan_cache, page_group_bytes
+from .scheduler import Request, RunningRequest, Scheduler, VirtualClock, \
+    WallClock
+from .runner import ModelRunner, supports_chunked
+from .engine import ServingEngine
+
+__all__ = [
+    "PagedKVCache", "SubSpec", "plan_cache", "page_group_bytes",
+    "Request", "RunningRequest", "Scheduler", "VirtualClock", "WallClock",
+    "ModelRunner", "supports_chunked", "ServingEngine",
+]

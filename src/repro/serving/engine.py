@@ -1,0 +1,237 @@
+"""Continuous-batching serving engine over the paged packed-KV cache.
+
+One engine iteration interleaves BOTH kinds of work:
+
+    ingest arrivals -> FIFO admission (slot + full page budget reserved)
+    one PREFILL unit  — the oldest admitted request's whole prompt, or
+                        its next chunk when `prefill_chunk` is set
+    one DECODE step   — every request with a committed prompt, batched
+                        through one jitted `decode_batch` call at a
+                        power-of-two slot bucket
+    retire completions — pages return to the free list (metadata only)
+
+so new requests reach their first token without draining the running
+batch, and running requests never stall behind a long prompt for more
+than one prefill unit.  All numbers the engine reports come from the
+injected clock (`perf_counter`-backed wall clock by default, virtual
+clock for deterministic benchmarks) — never `time.time()`.
+
+Budgets: `hbm_budget_bytes` sizes the page pool (admission is then a
+free-list question), and at construction the engine consults the PR-6
+`analysis.vmem` model to verify the packed decode-attention working set
+at full capacity fits on-chip — a config that could never lower fails
+fast here, not minutes into a traffic run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.vmem import vmem_feasible
+from repro.configs.base import ModelConfig
+from repro.models.attention import kv_cache_formats
+from .page_cache import PagedKVCache
+from .runner import ModelRunner, supports_chunked
+from .scheduler import Request, RunningRequest, Scheduler, WallClock
+
+
+class ServingEngine:
+    """Paged continuous-batching engine for one model.
+
+    Parameters mirror the static driver where they overlap; the engine
+    additions are the paging geometry (`max_slots` concurrent requests,
+    `capacity` positions per request, `page_size` positions per page)
+    and the budgets.  `temperature=0` decodes greedily (the parity
+    mode); `prefill_chunk` enables chunked prefill for full-causal
+    models.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int,
+                 capacity: int, page_size: int,
+                 prefill_chunk: Optional[int] = None,
+                 decode_lookahead: int = 1,
+                 temperature: float = 0.0, seed: int = 0,
+                 clock=None, check_finite: bool = False,
+                 n_pages: Optional[int] = None,
+                 hbm_budget_bytes: Optional[int] = None):
+        if decode_lookahead < 1:
+            raise ValueError("decode_lookahead must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.kv = PagedKVCache(cfg, max_slots=max_slots, capacity=capacity,
+                               page_size=page_size, n_pages=n_pages,
+                               hbm_budget_bytes=hbm_budget_bytes)
+        if prefill_chunk is not None and not supports_chunked(self.kv.specs):
+            raise ValueError(
+                "chunked prefill requires all attention layers to be "
+                "full-causal (windowed layers keep rolling ring buffers "
+                "whose write offsets the chunk path does not implement); "
+                "use whole-prompt prefill for this config")
+        self.prefill_chunk = prefill_chunk
+        self.decode_lookahead = int(decode_lookahead)
+        self.runner = ModelRunner(cfg, self.kv, temperature=temperature)
+        self.scheduler = Scheduler(self.kv)
+        self.clock = clock if clock is not None else WallClock()
+        self.check_finite = bool(check_finite)
+        self._key = jax.random.PRNGKey(seed)
+        self._step = 0
+        self.finished: List[RunningRequest] = []
+        self._check_vmem()
+
+    def _check_vmem(self) -> None:
+        """Fail fast if the packed decode-attention working set at full
+        slot capacity cannot fit VMEM for even the smallest seq tile."""
+        q = self.cfg.quant
+        if not (q.quantize_kv_cache and q.kv_layout == "packed"):
+            return
+        _, vp = kv_cache_formats(q)
+        shape = (self.kv.max_slots, self.kv.capacity,
+                 self.cfg.n_kv_heads, self.cfg.head_dim)
+        fits, need = vmem_feasible(
+            "vp_decode_attention", (128, min(128, self.kv.capacity), 1),
+            (vp,), shape)
+        if not fits:
+            raise ValueError(
+                f"decode-attention working set ({need} B) exceeds the "
+                f"VMEM budget at capacity {self.kv.capacity}; shrink "
+                f"capacity/max_slots or raise REPRO_VMEM_BUDGET_BYTES")
+
+    # -- request API --------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival_time: float = 0.0) -> Request:
+        return self.scheduler.submit(prompt, max_new_tokens, arrival_time)
+
+    # -- internals ----------------------------------------------------------
+
+    def _next_key(self):
+        """Fresh fold per compute unit — except greedy decoding, where
+        `_sample` never consumes the key: there the fold would be two
+        eager device dispatches per step bought for nothing."""
+        if self.runner.temperature == 0:
+            return self._key
+        self._step += 1
+        return jax.random.fold_in(self._key, self._step)
+
+    def _timed(self, fn, *args):
+        """Run one jitted step to completion and charge its wall time to
+        a virtual clock (wall clocks advance on their own)."""
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        if hasattr(self.clock, "tick"):
+            self.clock.tick(time.perf_counter() - t0)
+        return out
+
+    def _require_finite(self, logits, what: str) -> None:
+        if not self.check_finite:
+            return
+        if not bool(np.isfinite(np.asarray(logits)).all()):
+            raise FloatingPointError(
+                f"non-finite logits in {what} (quantization overflow or "
+                f"bad cache read)")
+
+    def _prefill_unit(self, run: RunningRequest) -> None:
+        """Commit one prefill unit for `run`: the whole prompt, or the
+        next `prefill_chunk` positions.  The unit that commits the final
+        prompt position also yields the request's first generated token."""
+        prompt = run.req.prompt
+        if self.prefill_chunk is None:
+            tok, logits = self._timed(
+                self.runner.prefill_commit, self.params,
+                jnp.asarray(prompt, jnp.int32), run.slot, self._next_key())
+            run.prefill_pos = len(prompt)
+        else:
+            c = min(self.prefill_chunk, len(prompt) - run.prefill_pos)
+            chunk = prompt[run.prefill_pos:run.prefill_pos + c]
+            tok, logits = self._timed(
+                self.runner.chunk_prefill_commit, self.params,
+                jnp.asarray(chunk, jnp.int32), run.slot, self._next_key())
+            run.prefill_pos += c
+        self._require_finite(logits, f"prefill rid={run.req.rid}")
+        if run.prefill_done:
+            run.tokens.append(int(tok[0, 0]))
+            run.first_token_time = self.clock.now()
+
+    def _lookahead(self, runs: List[RunningRequest]) -> int:
+        """Fused steps this batch can run: bounded by the configured
+        run-ahead and by every slot's cache headroom (a run-ahead past a
+        request's token budget only wastes the tail — admission already
+        guarantees the budgeted span fits, so headroom clamping keeps
+        over-generation inside the slot's reserved pages).  Restricted
+        to {1, decode_lookahead} so the compile cache stays one entry
+        per bucket, not one per headroom value."""
+        if self.decode_lookahead == 1:
+            return 1
+        headroom = min(
+            self.kv.capacity
+            - (len(r.req.prompt) + len(r.tokens) - 1) for r in runs)
+        return self.decode_lookahead \
+            if headroom >= self.decode_lookahead else 1
+
+    def _decode_once(self, runs: List[RunningRequest]) -> None:
+        slot_tokens = {r.slot: r.tokens[-1] for r in runs}
+        out = self._timed(self.runner.decode_batch, self.params,
+                          slot_tokens, self._next_key(),
+                          self._lookahead(runs))
+        by_slot = {r.slot: r for r in runs}
+        for slot, (toks, logits) in out.items():
+            self._require_finite(logits, f"decode slot={slot}")
+            run = by_slot[slot]
+            run.tokens.extend(toks)
+            # run-ahead may overshoot the budget; the overshoot was
+            # decoded into the slot's own reserved pages (freed at
+            # retire) and is dropped from the transcript here.
+            del run.tokens[run.req.max_new_tokens:]
+
+    def _retire(self) -> None:
+        now = self.clock.now()
+        for run in [r for r in self.scheduler.running.values() if r.done]:
+            self.scheduler.finish(run, now)
+            self.finished.append(run)
+
+    # -- main loop ----------------------------------------------------------
+
+    def step(self) -> bool:
+        """One engine iteration; returns False when fully idle."""
+        sched = self.scheduler
+        sched.admit(self.clock.now())
+        did = False
+        run = sched.next_prefill()
+        if run is not None:
+            self._prefill_unit(run)
+            did = True
+        decoding = sched.decoding()
+        if decoding:
+            self._decode_once(decoding)
+            did = True
+        self._retire()
+        if did:
+            return True
+        nxt = sched.next_arrival()
+        if nxt is None:
+            return not sched.idle
+        self.clock.wait_until(nxt)
+        return True
+
+    def run(self) -> List[Dict]:
+        """Serve until every submitted request completes; returns
+        per-request records (tokens + timing) sorted by request id."""
+        while self.step():
+            pass
+        recs = []
+        for run in sorted(self.finished, key=lambda r: r.req.rid):
+            recs.append({
+                "rid": run.req.rid,
+                "prompt_len": len(run.req.prompt),
+                "tokens": list(run.tokens),
+                "arrival_time": run.req.arrival_time,
+                "admitted_time": run.admitted_time,
+                "first_token_time": run.first_token_time,
+                "finish_time": run.finish_time,
+            })
+        return recs

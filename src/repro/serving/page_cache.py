@@ -1,0 +1,270 @@
+"""Paged packed-KV cache: page pools, block tables, free-list admission.
+
+The static driver's `init_cache(cfg, B, max_len)` allocates every
+request a contiguous `(B, max_len)` cache slice for its whole lifetime —
+admission means re-allocating (and copying) the batch.  This module
+replaces the SEQUENCE axis of every full-causal attention cache with a
+pool of fixed-size pages plus one per-slot block table:
+
+    pool      (reps, n_pages, page_size, *tail)   per cache buffer
+    block_table (max_slots, pages_per_slot) int32  SHARED by all pools
+    lengths   (max_slots,) int32                   valid span per slot
+
+One free list allocates PAGE GROUPS: page id `p` addresses the p-th page
+of every pool simultaneously (all attention layers advance in lockstep,
+so one block-table row serves the whole model — the vLLM block-table
+layout).  Admission pops `ceil((prompt+gen)/page_size)` ids; eviction
+pushes them back.  The packed VP words inside pages are never copied or
+dequantized by either operation.
+
+What stays DENSE (per-slot rows, not pages):
+
+  * rolling / sliding-window ring buffers — their size is bounded by the
+    window, so paging buys nothing, and the ring arithmetic
+    (`len % smax`) needs a contiguous buffer;
+  * SSM states (mamba h/conv, rwkv s/last) — fixed-size per slot.
+
+Page 0 is reserved as the dummy page (masked writes land there, nothing
+reads it); the free list hands out ids 1..n_pages-1.  `n_pages` is sized
+from the HBM byte budget when given, so "how many requests fit" is a
+byte question answered at construction, not an OOM at admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import paged
+from repro.models import init_cache, layer_groups
+
+# Buffer kinds -------------------------------------------------------------
+PAGED = "paged"      # full-causal attention cache: seq axis -> pages
+DENSE = "dense"      # rolling/SWA ring buffer: per-slot dense rows
+STATE = "state"      # SSM state: per-slot, no seq axis
+
+
+@dataclasses.dataclass(frozen=True)
+class SubSpec:
+    """Static plan of one sub-layer's cache storage."""
+    gi: int                 # layer-group index
+    sub: str                # key inside the group dict ("sub0", ...)
+    pattern: str
+    kind: str               # PAGED | DENSE | STATE
+    window: Optional[int]
+    buf_len: int            # seq-buffer length (0 for STATE)
+    reps: int
+    # (name, tail_shape, dtype) per buffer; tail = dims after the seq
+    # axis (PAGED/DENSE) or after the slot axis (STATE).  "len" excluded.
+    bufs: Tuple[Tuple[str, Tuple[int, ...], Any], ...]
+
+    @property
+    def has_len(self) -> bool:
+        return self.kind in (PAGED, DENSE)
+
+
+def _pattern_window(cfg: ModelConfig, pattern: str) -> Optional[int]:
+    if pattern in ("swa", "moe_swa"):
+        return cfg.sliding_window
+    if pattern == "local":
+        return cfg.local_window
+    return None
+
+
+def plan_cache(cfg: ModelConfig, capacity: int) -> List[SubSpec]:
+    """Classify every sub-layer cache: paged, dense ring, or SSM state.
+
+    Uses `init_cache` itself (via eval_shape — no allocation) as the
+    single source of truth for buffer names/shapes/dtypes, so any cache
+    layout the model zoo grows is picked up without touching this file.
+    """
+    if cfg.family == "encdec":
+        raise ValueError(
+            "paged serving does not support encoder-decoder models (the "
+            "cross-attention source is request-specific; use the static "
+            "driver)")
+    tmpl = jax.eval_shape(lambda: init_cache(cfg, 1, capacity))
+    specs: List[SubSpec] = []
+    for gi, group in enumerate(layer_groups(cfg)):
+        for j, pattern in enumerate(group.patterns):
+            sub = f"sub{j}"
+            entry = tmpl[gi][sub]
+            if pattern in ("mamba", "rwkv"):
+                kind, window, buf_len = STATE, None, 0
+                bufs = tuple(
+                    (name, tuple(a.shape[2:]), a.dtype)
+                    for name, a in sorted(entry.items()))
+            else:
+                window = _pattern_window(cfg, pattern)
+                # A windowed buffer is a rolling ring (buf_len <= window
+                # always holds — see `_attn_cache`): keep it dense.
+                kind = DENSE if window is not None else PAGED
+                names = sorted(n for n in entry if n != "len")
+                buf_len = int(entry[names[0]].shape[2])
+                bufs = tuple(
+                    (name, tuple(entry[name].shape[3:]), entry[name].dtype)
+                    for name in names)
+            specs.append(SubSpec(
+                gi=gi, sub=sub, pattern=pattern, kind=kind, window=window,
+                buf_len=buf_len, reps=group.repeats, bufs=bufs))
+    return specs
+
+
+def buf_key(spec: SubSpec, name: str) -> str:
+    return f"g{spec.gi}.{spec.sub}.{name}"
+
+
+def page_group_bytes(specs: List[SubSpec], page_size: int) -> int:
+    """HBM bytes one page id costs across ALL pools (the admission unit)."""
+    total = 0
+    for spec in specs:
+        if spec.kind != PAGED:
+            continue
+        for _, tail, dtype in spec.bufs:
+            total += spec.reps * page_size * int(np.prod(tail, dtype=np.int64)
+                                                 or 1) * np.dtype(dtype).itemsize
+    return int(total)
+
+
+class PagedKVCache:
+    """Page pools + block table + free list for one serving engine.
+
+    Device state (updated functionally by the runner's jitted calls):
+      pools        {buf_key: (reps, n_pages, page_size, *tail)}
+      dense        {buf_key: (reps, max_slots, ...)}  ring buffers + states
+      block_table  (max_slots, pages_per_slot) int32
+      lengths      (max_slots,) int32
+
+    Host state: the free-page list and per-slot page ownership.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, capacity: int,
+                 page_size: int, n_pages: Optional[int] = None,
+                 hbm_budget_bytes: Optional[int] = None):
+        if capacity % page_size:
+            raise ValueError(
+                f"capacity {capacity} must be a multiple of page_size "
+                f"{page_size}")
+        self.cfg = cfg
+        self.max_slots = int(max_slots)
+        self.capacity = int(capacity)
+        self.page_size = int(page_size)
+        self.pages_per_slot = capacity // page_size
+        self.specs = plan_cache(cfg, capacity)
+        self.group_count = len(layer_groups(cfg))
+        self.bytes_per_page = page_group_bytes(self.specs, page_size)
+
+        want = 1 + self.max_slots * self.pages_per_slot  # fully committed
+        if n_pages is None:
+            n_pages = want
+            if hbm_budget_bytes is not None and self.bytes_per_page:
+                n_pages = min(
+                    n_pages, 1 + hbm_budget_bytes // self.bytes_per_page)
+        if self.has_paged and n_pages < 1 + self.pages_per_slot:
+            raise ValueError(
+                f"page budget too small: {n_pages} pages "
+                f"({self.bytes_per_page} B each) cannot hold even one "
+                f"request of {self.pages_per_slot} pages + the dummy page")
+        self.n_pages = int(n_pages)
+
+        self.pools: Dict[str, jax.Array] = {}
+        self.dense: Dict[str, jax.Array] = {}
+        for spec in self.specs:
+            for name, tail, dtype in spec.bufs:
+                k = buf_key(spec, name)
+                if spec.kind == PAGED:
+                    self.pools[k] = jnp.zeros(
+                        (spec.reps, self.n_pages, page_size) + tail, dtype)
+                elif spec.kind == DENSE:
+                    self.dense[k] = jnp.zeros(
+                        (spec.reps, max_slots, spec.buf_len) + tail, dtype)
+                else:
+                    self.dense[k] = jnp.zeros(
+                        (spec.reps, max_slots) + tail, dtype)
+        self.block_table = jnp.zeros(
+            (max_slots, self.pages_per_slot), jnp.int32)
+        self.lengths = jnp.zeros((max_slots,), jnp.int32)
+
+        # Host-side allocator: LIFO free list over page ids 1..n_pages-1.
+        self.free_pages: List[int] = list(range(self.n_pages - 1, 0, -1))
+        self.slot_pages: Dict[int, List[int]] = {}
+        self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+
+    # -- capacity queries ---------------------------------------------------
+
+    @property
+    def has_paged(self) -> bool:
+        return any(s.kind == PAGED for s in self.specs)
+
+    def pages_needed(self, total_len: int) -> int:
+        if not self.has_paged:
+            return 0
+        return math.ceil(total_len / self.page_size)
+
+    def can_admit(self, total_len: int) -> bool:
+        if total_len > self.capacity:
+            raise ValueError(
+                f"request needs {total_len} positions > engine capacity "
+                f"{self.capacity}")
+        return bool(self.free_slots) \
+            and self.pages_needed(total_len) <= len(self.free_pages)
+
+    def hbm_bytes(self) -> int:
+        """Bytes of pool + dense cache storage actually allocated."""
+        return int(sum(
+            a.size * a.dtype.itemsize
+            for a in list(self.pools.values()) + list(self.dense.values())))
+
+    # -- admission / eviction ----------------------------------------------
+
+    def alloc(self, total_len: int) -> int:
+        """Claim a slot + pages for a request of `total_len` positions.
+
+        Returns the slot id.  The slot's dense rows are zeroed (a fresh
+        request must not see the previous tenant's ring/SSM state); its
+        PAGES are handed over as-is — page contents are garbage until
+        written, and every read is masked by `lengths`, which the
+        no-aliasing property tests pin by poisoning free pages.
+        """
+        n = self.pages_needed(total_len)
+        if not self.free_slots or n > len(self.free_pages):
+            raise RuntimeError("alloc called without can_admit")
+        slot = self.free_slots.pop()
+        pages = [self.free_pages.pop() for _ in range(n)]
+        self.slot_pages[slot] = pages
+        row = np.zeros((self.pages_per_slot,), np.int32)
+        row[:n] = pages
+        self.block_table = self.block_table.at[slot].set(jnp.asarray(row))
+        self.lengths = self.lengths.at[slot].set(0)
+        for spec in self.specs:
+            if spec.kind == PAGED:
+                continue
+            for name, _, _ in spec.bufs:
+                k = buf_key(spec, name)
+                self.dense[k] = self.dense[k].at[:, slot].set(0)
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Evict a request: return its pages to the free list.
+
+        Metadata-only — no page contents move.  The block-table row is
+        zeroed (points at the dummy page) so a stale row can never alias
+        a page's next owner.
+        """
+        pages = self.slot_pages.pop(slot, [])
+        self.free_pages.extend(reversed(pages))
+        self.free_slots.append(slot)
+        self.block_table = self.block_table.at[slot].set(0)
+        self.lengths = self.lengths.at[slot].set(0)
+
+    # -- debug/test helpers -------------------------------------------------
+
+    def gather_slot(self, key: str, slot: int) -> jax.Array:
+        """One slot's contiguous view of one pooled buffer (tests)."""
+        bt = self.block_table[slot][None]
+        return paged.gather_pages(self.pools[key], bt)[:, 0]

@@ -1,0 +1,155 @@
+"""Serving-side profiling helpers: panel discovery + decode autotuning.
+
+Extracted from `launch/serve.py` so both the static CLI path and the
+paged engine share one tuning surface.  Key discipline: every benchmark
+tensor gets its OWN fold of the caller's key (`panel_keys`) — the old
+code fed one `PRNGKey(seed)` to every weight panel AND its activations,
+correlating the timed operands with each other (and, upstream, with the
+model init), which biases sparsity/range-dependent timings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import canonical_formats
+
+
+def panel_keys(key, idx: int, n: int = 2):
+    """`n` independent keys for benchmark panel `idx`.
+
+    fold_in(idx) separates panels; split separates the tensors WITHIN a
+    panel — two tensors drawn here are never correlated with each other
+    or with any other panel's draws.
+    """
+    return jax.random.split(jax.random.fold_in(key, idx), n)
+
+
+def quantized_bytes(params) -> int:
+    """Bytes of integer serving storage (packed words / significand and
+    index planes; float32 scale tensors are NOT counted)."""
+    return int(sum(
+        l.size * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(params)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.integer)))
+
+
+def weight_panels(params):
+    """Distinct (d_in, d_out) of every packed weight that feeds the
+    serving matmul.
+
+    The embedding table is excluded: it is consumed by `embed_lookup` as
+    a row GATHER, never by `vp_dequant_matmul` — tuning a (vocab, d)
+    panel would burn vocab-sized benchmark matmuls and persist cache
+    entries nothing reads (lm_head's (d, vocab) panel is the real one).
+    """
+    panels = set()
+
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            if "w_packed" in node:
+                if name != "embed":
+                    w = node["w_packed"]
+                    panels.add((int(w.shape[-2]), int(w.shape[-1])))
+                return
+            for k, v in node.items():
+                walk(v, k)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v, name)
+
+    walk(params)
+    return sorted(panels)
+
+
+def attn_cache_geometries(cfg, max_len: int):
+    """Distinct decode-attention cache geometries of the model's layer
+    plan: (buf_len, window, rolling) per attention pattern — exactly the
+    shapes `attn_block` will launch `vp_decode_attention` with."""
+    from repro.models.model import layer_groups
+
+    shapes = set()
+    for group in layer_groups(cfg):
+        for pattern in group.patterns:
+            if pattern in ("mamba", "rwkv"):
+                continue
+            window = (cfg.sliding_window if pattern in ("swa", "moe_swa")
+                      else (cfg.local_window if pattern == "local"
+                            else None))
+            buf_len = min(max_len, window) if window else max_len
+            rolling = window is not None and buf_len <= window
+            shapes.add((buf_len, window or 0, rolling))
+    if cfg.family == "encdec":
+        shapes.add((max_len, 0, False))
+    return sorted(shapes)
+
+
+def tune_decode_profile(params, cfg, batch: int, max_len: int = 0,
+                        seed: int = 0):
+    """Tune the serving kernels this process will launch at decode.
+
+    Weight panels: `vp_dequant_matmul` at every M = 1..batch (persisted
+    per (M, K, N)).  With a VP-quantized packed KV cache, ALSO profiles
+    `vp_decode_attention` over the model's cache geometries (buf_len,
+    window, rolling) at batch `batch` — the attention tile cache key
+    includes the masking regime, so each geometry tunes separately.
+    """
+    from repro.kernels import autotune, ops, substrate
+    from repro.core.packing import storage_dtype
+
+    _, vp = canonical_formats(cfg.quant)
+    backend = substrate.resolve_backend(None)
+    if backend == "ref":
+        # The ref path's math is tile-independent and never reads the
+        # cache — measuring candidates here would record pure timer
+        # noise and burn minutes of model-size matmuls for nothing.
+        print("[serve] decode autotune profile skipped: backend is the "
+              "jnp ref (blocks only affect kernel backends)")
+        return {}
+    key = jax.random.PRNGKey(seed)
+    sizes = tuple(sorted({1 << p for p in range(batch.bit_length())
+                          if (1 << p) <= batch} | {batch}))
+    profile = {}
+    for pi, (K, N) in enumerate(weight_panels(params)):
+        kw, kx = panel_keys(key, pi)
+        w = jax.random.randint(
+            kw, (K, N), -8, 8).astype(storage_dtype(vp))
+        x_full = jax.random.normal(kx, (max(sizes), K), jnp.float32)
+
+        def bench(M, blocks, w=w, x_full=x_full):
+            jax.block_until_ready(ops.vp_dequant_matmul(
+                x_full[:M], w, vp, blocks=blocks))
+
+        profile[(K, N)] = autotune.tune_serving_decode(
+            "vp_dequant_matmul", K, N, (vp,), backend, bench,
+            batch_sizes=sizes)
+    if cfg.quant.quantize_kv_cache and cfg.quant.kv_layout == "packed" \
+            and max_len:
+        from repro.models.attention import kv_cache_formats
+
+        _, kv_vp = kv_cache_formats(cfg.quant)
+        KV, dh, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+        akey = jax.random.fold_in(key, -1)  # disjoint from panel folds
+        for gi, (buf_len, window, rolling) in enumerate(
+                attn_cache_geometries(cfg, max_len)):
+            kk, kq = panel_keys(akey, gi)
+            kw = jax.random.randint(
+                kk, (batch, buf_len, KV, dh), -8, 8
+            ).astype(storage_dtype(kv_vp))
+            ks = jnp.ones((batch, buf_len, 1, 1), jnp.float32)
+            q = jax.random.normal(kq, (batch, 1, H, dh), jnp.float32)
+            lens = jnp.full((batch,), buf_len, jnp.int32)
+            win = window or None
+
+            def bench_attn(blocks, kw=kw, ks=ks, q=q, lens=lens, win=win,
+                           rolling=rolling):
+                jax.block_until_ready(ops.vp_decode_attention(
+                    q, kw, kw, ks, ks, lens, kv_vp, window=win,
+                    rolling=rolling, blocks=blocks))
+
+            shape = (batch, buf_len, KV, dh, window, int(rolling))
+            profile[("attn",) + shape] = autotune.tune(
+                "vp_decode_attention", shape, (kv_vp,), backend,
+                bench_attn,
+                candidates=autotune.attn_candidates(H // KV, buf_len))
+    return profile

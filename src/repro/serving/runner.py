@@ -1,0 +1,327 @@
+"""Model runner: jitted prefill/decode steps over the paged cache.
+
+Every step is one compiled function with a fixed shape signature:
+
+  gather  — block-table rows -> contiguous per-slot cache views
+            (`kernels.paged.gather_pages`; dense ring/SSM rows slice
+            directly).  The view length is the FULL slot capacity, so
+            one decode compile serves every mix of request lengths —
+            positions past a slot's `lengths` entry are masked to
+            exactly-zero softmax terms by the attention cores, which is
+            what keeps engine logits bit-identical to the static driver
+            on the ref backend.
+  compute — the UNCHANGED model functions (`prefill` / `decode_step`):
+            the paged engine adds no second model implementation, and
+            the packed-KV view flows through the same
+            `vp_decode_attention` op (its scalar-prefetched `lengths`
+            carries the ragged per-request spans).
+  commit  — scatter ONLY the newly written positions back to the pools
+            (one token per slot at decode; whole pages at prefill) and
+            write back dense rows/states.  Nothing else in the cache is
+            copied or dequantized.
+  sample  — argmax / categorical INSIDE the jitted step, so the decode
+            wall-clock measures the model, not a host-side Python
+            sampling loop.
+
+Batch steps run at power-of-two slot buckets (compile per bucket, not
+per composition); inactive padding rows are distinct parked slots whose
+commits are masked to the dummy page / their own old rows.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import paged
+from repro.models import decode_step, prefill
+from .page_cache import DENSE, PAGED, PagedKVCache, SubSpec, buf_key
+
+
+def _sample(logits, key, temperature: float):
+    """Next-token draw inside the jitted step (B, V) -> (B, 1) int32."""
+    if temperature > 0:
+        tok = jax.random.categorical(key, logits / temperature)
+    else:
+        tok = jnp.argmax(logits, -1)
+    return tok.astype(jnp.int32)[:, None]
+
+
+def build_view(specs: Sequence[SubSpec], n_groups: int, pools, dense,
+               block_table, lengths, slots):
+    """Reassemble the `init_cache`-shaped pytree for a batch of slots.
+
+    Paged buffers gather their block-table pages into a contiguous
+    capacity-length view; dense ring buffers and SSM states slice their
+    slot rows.  `len` entries broadcast the global per-slot lengths.
+    """
+    lens = lengths[slots]
+    caches: List[dict] = [dict() for _ in range(n_groups)]
+    for spec in specs:
+        entry = {}
+        if spec.kind == PAGED:
+            bt = block_table[slots]
+            for name, _, _ in spec.bufs:
+                entry[name] = paged.gather_pages(
+                    pools[buf_key(spec, name)], bt)
+        else:
+            for name, _, _ in spec.bufs:
+                entry[name] = dense[buf_key(spec, name)][:, slots]
+        if spec.has_len:
+            entry["len"] = jnp.broadcast_to(
+                lens[None], (spec.reps, lens.shape[0]))
+        caches[spec.gi][spec.sub] = entry
+    return caches
+
+
+def supports_chunked(specs: Sequence[SubSpec]) -> bool:
+    """Chunked prefill needs offset-aware attention writes, which the
+    chunk path implements for full-causal (non-windowed) layers only;
+    SSM states carry across chunks natively."""
+    return all(s.kind != DENSE for s in specs)
+
+
+class ModelRunner:
+    """Compiled-step cache + functional state threading for one engine."""
+
+    def __init__(self, cfg: ModelConfig, kv: PagedKVCache,
+                 temperature: float = 0.0):
+        self.cfg = cfg
+        self.kv = kv
+        self.temperature = float(temperature)
+        # Donation lets XLA update pools in place; CPU ignores it (and
+        # warns), so only request it off-CPU.
+        self._donate = jax.default_backend() != "cpu"
+        self._decode_fns: Dict[Tuple[int, int], callable] = {}
+        self._prefill_fns: Dict[int, callable] = {}
+        self._chunk_fns: Dict[Tuple[int, bool], callable] = {}
+        # (slots, active) device operands keyed by batch composition —
+        # the composition only changes on admission/retirement, so this
+        # avoids two host->device transfers on every decode step.
+        self._comp_cache: Dict[Tuple[Tuple[int, ...], int], tuple] = {}
+
+    # -- compiled-step builders --------------------------------------------
+
+    def _jit(self, fn, donate):
+        return jax.jit(fn, donate_argnums=donate if self._donate else ())
+
+    def _fresh_cache(self, prompt_pad: int):
+        """Zero B=1 cache pytree for a whole-prompt prefill: paged subs
+        sized to the page-rounded prompt, dense/state subs at their
+        engine shapes (rows write back verbatim)."""
+        kv = self.kv
+        fresh: List[dict] = [dict() for _ in range(kv.group_count)]
+        for spec in kv.specs:
+            entry = {}
+            for name, tail, dtype in spec.bufs:
+                if spec.kind == PAGED:
+                    shape = (spec.reps, 1, prompt_pad) + tail
+                elif spec.kind == DENSE:
+                    shape = (spec.reps, 1, spec.buf_len) + tail
+                else:
+                    shape = (spec.reps, 1) + tail
+                entry[name] = jnp.zeros(shape, dtype)
+            if spec.has_len:
+                entry["len"] = jnp.zeros((spec.reps, 1), jnp.int32)
+            fresh[spec.gi][spec.sub] = entry
+        return fresh
+
+    def _make_prefill(self, S: int):
+        kv, cfg = self.kv, self.cfg
+        ps = kv.page_size
+        Sp = min(-(-S // ps) * ps, kv.capacity) if kv.has_paged else S
+        n_pg = Sp // ps if kv.has_paged else 0
+        temperature = self.temperature
+
+        def fn(params, tokens, pools, dense, bt_row, lengths, slot, key):
+            logits, filled = prefill(
+                params, tokens, self._fresh_cache(Sp), cfg)
+            nxt = _sample(logits, key, temperature)
+            for spec in kv.specs:
+                entry = filled[spec.gi][spec.sub]
+                for name, _, _ in spec.bufs:
+                    k = buf_key(spec, name)
+                    if spec.kind == PAGED:
+                        pools[k] = paged.scatter_pages(
+                            pools[k], bt_row[:n_pg], entry[name][:, 0])
+                    else:
+                        dense[k] = dense[k].at[:, slot].set(entry[name][:, 0])
+            lengths = lengths.at[slot].set(S)
+            return nxt, logits, pools, dense, lengths
+
+        return self._jit(fn, donate=(2, 3, 5))
+
+    def _make_chunk(self, C: int):
+        kv, cfg = self.kv, self.cfg
+        ps = kv.page_size
+        temperature = self.temperature
+
+        def fn(params, tokens, pools, dense, block_table, lengths, slot,
+               key):
+            slots = jnp.reshape(slot, (1,))
+            view = build_view(kv.specs, kv.group_count, pools, dense,
+                              block_table, lengths, slots)
+            logits, new_caches = prefill(params, tokens, view, cfg,
+                                         chunked=True)
+            nxt = _sample(logits, key, temperature)
+            pos0 = lengths[slot]
+            idxs = pos0 + jnp.arange(C, dtype=jnp.int32)
+            for spec in kv.specs:
+                entry = new_caches[spec.gi][spec.sub]
+                for name, tail, _ in spec.bufs:
+                    k = buf_key(spec, name)
+                    if spec.kind == PAGED:
+                        idx = idxs.reshape((1, 1, C) + (1,) * len(tail))
+                        val = jnp.take_along_axis(
+                            entry[name], idx, axis=2)[:, 0]
+                        pools[k] = paged.scatter_positions(
+                            pools[k], block_table[slot][idxs // ps],
+                            idxs % ps, val)
+                    else:
+                        dense[k] = dense[k].at[:, slot].set(entry[name][:, 0])
+            lengths = lengths.at[slot].set(pos0 + C)
+            return nxt, logits, pools, dense, lengths
+
+        return self._jit(fn, donate=(2, 3, 5))
+
+    def _make_decode(self, Bp: int, n_steps: int):
+        """Fused decode: gather the slot views ONCE, run `n_steps`
+        feedback decode steps inside one `lax.scan`, scatter the
+        `n_steps` new positions per slot once at the end.
+
+        Each in-scan step is the UNCHANGED `decode_step` on the same
+        contiguous view a single-step call would see (the view after an
+        in-view append is elementwise identical to scatter-then-regather)
+        so the emitted logits are bit-identical to `n_steps` separate
+        calls — run-ahead buys dispatch/gather/scatter amortization, not
+        different math."""
+        kv, cfg = self.kv, self.cfg
+        ps = kv.page_size
+        temperature = self.temperature
+
+        def fn(params, tokens, pools, dense, block_table, lengths, slots,
+               active, key):
+            view = build_view(kv.specs, kv.group_count, pools, dense,
+                              block_table, lengths, slots)
+
+            def body(carry, i):
+                toks, caches = carry
+                logits, caches = decode_step(params, toks, caches, cfg)
+                nxt = _sample(logits, jax.random.fold_in(key, i),
+                              temperature)
+                return (nxt, caches), (nxt, logits)
+
+            (_, view), (nxts, logits) = jax.lax.scan(
+                body, (tokens, view),
+                jnp.arange(n_steps, dtype=jnp.int32))
+            pos0 = jnp.where(active, lengths[slots], 0)
+            idxs = pos0[:, None] + jnp.arange(
+                n_steps, dtype=jnp.int32)[None]
+            for spec in kv.specs:
+                entry = view[spec.gi][spec.sub]
+                if spec.kind == PAGED:
+                    # Inactive rows scatter to the dummy page 0; nothing
+                    # reads it, so collisions there are harmless.
+                    pages = jnp.where(
+                        active[:, None],
+                        jnp.take_along_axis(block_table[slots],
+                                            idxs // ps, axis=1), 0)
+                    for name, tail, _ in spec.bufs:
+                        k = buf_key(spec, name)
+                        idx = idxs.reshape(
+                            (1, Bp, n_steps) + (1,) * len(tail))
+                        val = jnp.take_along_axis(entry[name], idx, axis=2)
+                        pools[k] = paged.scatter_positions(
+                            pools[k], pages, idxs % ps, val)
+                else:
+                    for name, _, _ in spec.bufs:
+                        k = buf_key(spec, name)
+                        nb = entry[name]
+                        mask = active.reshape(
+                            (1, Bp) + (1,) * (nb.ndim - 2))
+                        dense[k] = dense[k].at[:, slots].set(
+                            jnp.where(mask, nb, dense[k][:, slots]))
+            lengths = lengths.at[slots].add(
+                n_steps * active.astype(jnp.int32))
+            nxts = jnp.where(active[None, :, None], nxts, 0)
+            return nxts, logits, pools, dense, lengths
+
+        return self._jit(fn, donate=(2, 3, 5))
+
+    # -- public steps (thread kv state functionally) ------------------------
+
+    def prefill_commit(self, params, prompt, slot: int, key):
+        """Whole-prompt prefill into the slot's pages; returns
+        (first sampled token (1,1), last-position logits (1, V))."""
+        kv = self.kv
+        S = int(prompt.shape[-1])
+        fn = self._prefill_fns.get(S)
+        if fn is None:
+            fn = self._prefill_fns[S] = self._make_prefill(S)
+        tokens = jnp.asarray(prompt, jnp.int32).reshape(1, S)
+        bt_row = kv.block_table[slot]
+        nxt, logits, kv.pools, kv.dense, kv.lengths = fn(
+            params, tokens, kv.pools, kv.dense, bt_row, kv.lengths,
+            jnp.int32(slot), key)
+        return nxt, logits
+
+    def chunk_prefill_commit(self, params, chunk, slot: int, key):
+        """One prompt chunk through the offset-aware prefill path;
+        returns (sampled token, logits) — only the FINAL chunk's sample
+        is the request's first generated token."""
+        kv = self.kv
+        C = int(chunk.shape[-1])
+        fn = self._chunk_fns.get(C)
+        if fn is None:
+            fn = self._chunk_fns[C] = self._make_chunk(C)
+        tokens = jnp.asarray(chunk, jnp.int32).reshape(1, C)
+        nxt, logits, kv.pools, kv.dense, kv.lengths = fn(
+            params, tokens, kv.pools, kv.dense, kv.block_table, kv.lengths,
+            jnp.int32(slot), key)
+        return nxt, logits
+
+    def decode_batch(self, params, slot_tokens: Dict[int, int], key,
+                     steps: int = 1):
+        """`steps` fused decode steps for every slot in `slot_tokens`.
+
+        Pads the active set to a power-of-two bucket with DISTINCT
+        parked slots (no index collisions with an active row), so
+        compilation is per (bucket size, steps), not per batch
+        composition.  The caller guarantees every active slot has
+        `steps` positions of cache headroom.
+        Returns {slot: (tokens list[int] of length `steps`, logits
+        np.ndarray (steps, V))} — host values via ONE transfer each for
+        tokens and logits; per-slot device slicing here would dispatch
+        2B eager ops per step and dominate the step at small model
+        sizes.
+        """
+        kv = self.kv
+        act = sorted(slot_tokens)
+        Bp = 1
+        while Bp < len(act):
+            Bp <<= 1
+        Bp = min(Bp, kv.max_slots) if Bp > len(act) else Bp
+        pad = [s for s in range(kv.max_slots) if s not in slot_tokens]
+        slots = act + pad[:Bp - len(act)]
+        comp = self._comp_cache.get((tuple(slots), len(act)))
+        if comp is None:
+            comp = (jnp.asarray(slots, jnp.int32),
+                    jnp.asarray([True] * len(act)
+                                + [False] * (Bp - len(act)), bool))
+            self._comp_cache[(tuple(slots), len(act))] = comp
+        tokens = [slot_tokens.get(s, 0) for s in slots]
+        fn = self._decode_fns.get((Bp, steps))
+        if fn is None:
+            fn = self._decode_fns[(Bp, steps)] = self._make_decode(
+                Bp, steps)
+        nxt, logits, kv.pools, kv.dense, kv.lengths = fn(
+            params, jnp.asarray(np.asarray(tokens, np.int32)[:, None]),
+            kv.pools, kv.dense, kv.block_table, kv.lengths,
+            comp[0], comp[1], key)
+        nxt_h = np.asarray(nxt)          # (steps, Bp, 1)
+        logits_h = np.asarray(logits)    # (steps, Bp, V)
+        return {s: ([int(t) for t in nxt_h[:, i, 0]], logits_h[:, i])
+                for i, s in enumerate(act)}

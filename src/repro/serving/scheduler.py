@@ -1,0 +1,172 @@
+"""Request lifecycle + admission scheduling for the paged engine.
+
+The scheduler is deliberately host-side and deterministic: given the
+same arrival trace it makes the same admission/eviction decisions, so
+engine-vs-static parity tests can replay exact schedules.  Time comes
+from an injected clock —
+
+  * `WallClock`   — `time.perf_counter` based (NEVER `time.time()`: an
+    NTP step mid-run would skew every latency/throughput number, which
+    is exactly the bug the static driver's reports had);
+  * `VirtualClock` — advances only when told, so benchmarks can replay
+    a Poisson arrival trace deterministically and tests never sleep.
+
+Admission is FIFO head-of-line: a request is admitted when a slot is
+free AND the free list holds every page the request could EVER need
+(`ceil((prompt + max_new_tokens) / page_size)`).  Reserving the full
+page budget up front means an admitted request can never deadlock the
+engine mid-generation — eviction happens only at completion, never as
+preemption, so no cache state is ever recomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+
+class WallClock:
+    """Monotonic real time; `wait_until` sleeps through idle gaps."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+
+class VirtualClock:
+    """Deterministic clock for benchmarks/tests.
+
+    `tick(dt)` accounts measured compute time; `wait_until` jumps over
+    idle gaps instantly.  Arrival traces replay identically across runs.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def tick(self, dt: float) -> None:
+        self._t += max(0.0, dt)
+
+    def wait_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+
+@dataclasses.dataclass
+class Request:
+    """One submitted generation request (immutable intent)."""
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    arrival_time: float = 0.0
+
+    @property
+    def total_len(self) -> int:
+        # Prompt positions + cache growth during generation.  The final
+        # sampled token is returned but never written to the cache, so
+        # the cache span is prompt + (gen - 1) + the prefill position
+        # itself; budgeting prompt + gen is the safe upper bound.
+        return len(self.prompt) + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RunningRequest:
+    """Engine-side state of an admitted request."""
+    req: Request
+    slot: int
+    admitted_time: float
+    prefill_pos: int = 0            # prompt positions already committed
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= len(self.req.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.req.max_new_tokens
+
+
+class Scheduler:
+    """FIFO continuous-batching scheduler over a `PagedKVCache`.
+
+    Owns the waiting queue and the running set; the engine asks it
+    "admit whom?", "whose prefill next?", "who decodes?" each iteration.
+    """
+
+    def __init__(self, kv, max_slots: Optional[int] = None):
+        self.kv = kv
+        self.max_slots = max_slots if max_slots is not None else kv.max_slots
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, RunningRequest] = {}   # slot -> state
+        self._rid = itertools.count()
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival_time: float = 0.0) -> Request:
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      max_new_tokens=int(max_new_tokens),
+                      arrival_time=float(arrival_time))
+        self.waiting.append(req)
+        return req
+
+    def admit(self, now: float) -> List[RunningRequest]:
+        """Head-of-line FIFO admission under slot + page budget.
+
+        Strict FIFO: if the head doesn't fit, nothing behind it jumps
+        the queue (no starvation of long requests).
+        """
+        admitted = []
+        while self.waiting:
+            head = self.waiting[0]
+            if head.arrival_time > now:
+                break
+            if len(self.running) >= self.max_slots:
+                break
+            if not self.kv.can_admit(head.total_len):
+                break
+            self.waiting.popleft()
+            slot = self.kv.alloc(head.total_len)
+            run = RunningRequest(req=head, slot=slot, admitted_time=now)
+            self.running[slot] = run
+            admitted.append(run)
+        return admitted
+
+    def next_prefill(self) -> Optional[RunningRequest]:
+        """Oldest admitted request with prompt positions still uncommitted."""
+        cands = [r for r in self.running.values() if not r.prefill_done]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: r.req.rid)
+
+    def decoding(self) -> List[RunningRequest]:
+        """Requests with a committed prompt and generation still to do."""
+        return sorted(
+            (r for r in self.running.values()
+             if r.prefill_done and not r.done),
+            key=lambda r: r.slot)
+
+    def finish(self, run: RunningRequest, now: float) -> None:
+        run.finish_time = now
+        self.kv.free(run.slot)
+        del self.running[run.slot]
+
+    def next_arrival(self) -> Optional[float]:
+        if not self.waiting:
+            return None
+        return min(r.arrival_time for r in self.waiting)
+
+    @property
+    def idle(self) -> bool:
+        return not self.running and not self.waiting

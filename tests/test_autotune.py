@@ -200,3 +200,39 @@ def test_record_merges_with_concurrent_writer(tmp_cache):
     assert autotune.get_cached("k1") == (1, 1, 1)
     assert autotune.get_cached("k2") == (2, 2, 2)
     assert autotune.get_cached("k3") == (3, 3, 3)
+
+
+def _record_worker(path, start, wid, n):
+    # Runs in a child process: hammer record() on worker-unique keys.
+    os.environ["REPRO_AUTOTUNE_CACHE"] = path
+    from repro.kernels import autotune as at
+    at._caches.pop(path, None)
+    start.wait()
+    for i in range(n):
+        at.record(f"w{wid}.k{i}", (wid + 1, i + 1, 1))
+
+
+def test_record_cross_process_writers_lose_no_entries(tmp_cache):
+    """N processes hammering record() concurrently: the file ends up with
+    the union of every writer's entries (the flock closes the read->
+    rename lost-update gap the in-process merge test can't see)."""
+    import multiprocessing as mp
+
+    ctx = mp.get_context("fork")
+    workers, per = 4, 25
+    start = ctx.Event()
+    procs = [ctx.Process(target=_record_worker,
+                         args=(tmp_cache, start, w, per))
+             for w in range(workers)]
+    for p in procs:
+        p.start()
+    start.set()
+    for p in procs:
+        p.join(timeout=60)
+        assert p.exitcode == 0
+    with open(tmp_cache) as f:
+        data = json.load(f)
+    missing = [f"w{w}.k{i}" for w in range(workers) for i in range(per)
+               if f"w{w}.k{i}" not in data]
+    assert not missing, f"lost {len(missing)} entries: {missing[:5]}"
+    assert data["w0.k0"] == [1, 1, 1]
