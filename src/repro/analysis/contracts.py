@@ -84,6 +84,33 @@ def require_int_accum_safe(
     return True
 
 
+@functools.lru_cache(maxsize=None)
+def require_vmem_feasible(kernel: str, blocks, formats, shape,
+                          what: str = "kernel op") -> bool:
+    """Hard contract for TPU-native launches: the resolved tiling must
+    fit the modeled VMEM working set.  The model is a LOWER bound
+    (`analysis.vmem`), so anything it rejects would fail at Mosaic
+    lowering anyway — raising here turns a cryptic lowering crash into
+    the analyzer's byte accounting.
+
+    Under shard_map, `shape` at the op entry is the per-shard LOCAL
+    operand shape, so the contract naturally reasons about the tile
+    each device actually stages — a tiling that only fits because the
+    mesh shrank the operand passes; one whose local tile still
+    overflows fails before launch.
+    """
+    from . import vmem
+    ok, need = vmem.vmem_feasible(kernel, tuple(blocks), formats, shape)
+    if not ok:
+        raise VPContractError(
+            f"static contract violation in {what}: tiling "
+            f"{tuple(blocks)} at shape {tuple(shape)} needs {need} bytes "
+            f"of VMEM > budget {vmem.vmem_budget_bytes()} "
+            f"(model: repro.analysis.vmem — a launch would fail at "
+            f"Mosaic lowering)")
+    return True
+
+
 def float_exactness_horizon(a: Format, b: Format) -> int:
     """Max K with exact f32 accumulation (informational, never raises)."""
     return bitwidth.max_safe_k(a, b, "float32")

@@ -26,6 +26,14 @@ Rules (severities are assigned by `analysis.rules`):
   JX-JIT    a public `*_ref` oracle in `kernels.ref` that is not
             jit-wrapped: eager per-call dispatch cascades (the PR-2
             decode regression) — checked structurally, no trace needed.
+  JX-SHGATH inside a shard_map body, an integer `all_gather` (packed
+            weight words reassembled across the tensor axis) followed by
+            a float tensor of exactly the gathered shape: the full
+            UNSHARDED weight was dequantized on every device after the
+            gather — sharding moved the bytes but bought no memory.
+            The column/ring modes in `parallel.shard_ops` never do this
+            (outputs resp. per-chunk tiles travel, not the whole
+            weight); the `gather` baseline mode is the pattern flagged.
 """
 from __future__ import annotations
 
@@ -146,6 +154,60 @@ def lint_traced(
                         f"{eqn.primitive.name} produces a float {shape} "
                         f"tensor spanning the whole vocab in a decode "
                         f"step — O(vocab) work per generated token"))
+    return findings
+
+
+def _shard_map_bodies(jaxpr) -> Iterator[Any]:
+    """Yield the body jaxpr of every shard_map eqn, at any nesting depth
+    outside of one (shard_map does not nest in this codebase)."""
+    if isinstance(jaxpr, jax.core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        if "shard_map" in eqn.primitive.name:
+            for sub, _ in _subjaxprs(eqn):
+                yield sub
+        else:
+            for sub, _ in _subjaxprs(eqn):
+                yield from _shard_map_bodies(sub)
+
+
+def lint_sharded_traced(jaxpr, where: str = "") -> List[Dict[str, str]]:
+    """JX-SHGATH over every shard_map body in a traced graph.
+
+    Structural, so the verdict is mesh-size independent: an integer
+    `all_gather` outvar (>= `_WMAT_MIN_ELEMS` elements) records its
+    shape; any LATER float outvar of the identical shape in the same
+    body is the full gathered weight dequantized in HBM.  Float matches
+    inside pallas_call bodies are ignored (per-tile VMEM dequants are
+    the design), so trace on the ref backend, where the full dequant is
+    a visible jnp op.
+    """
+    findings: List[Dict[str, str]] = []
+    seen: Set[Tuple[str, Tuple[int, ...]]] = set()
+    for body in _shard_map_bodies(jaxpr):
+        gathered: Set[Tuple[int, ...]] = set()
+        for eqn, in_pallas in iter_eqns(body):
+            is_gather = eqn.primitive.name == "all_gather"
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                dtype = getattr(aval, "dtype", None)
+                shape = tuple(getattr(aval, "shape", ()))
+                if dtype is None or int(np.prod(shape)) < _WMAT_MIN_ELEMS:
+                    continue
+                if is_gather and jnp.issubdtype(dtype, jnp.integer):
+                    gathered.add(shape)
+                elif (not in_pallas and shape in gathered
+                      and jnp.issubdtype(dtype, jnp.floating)):
+                    key = (where, shape)
+                    if key not in seen:
+                        seen.add(key)
+                        findings.append(_finding(
+                            "JX-SHGATH", where,
+                            f"{eqn.primitive.name} materializes a float "
+                            f"{shape} tensor matching an all-gathered "
+                            f"integer shape inside a shard_map body — "
+                            f"the full unsharded weight was dequantized "
+                            f"on every device after the gather"))
     return findings
 
 

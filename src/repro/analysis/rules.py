@@ -53,6 +53,9 @@ RULES: Dict[str, Tuple[Severity, str]] = {
     "JX-WMAT": ("warn", "full-weight float materialization"),
     "JX-VOCAB": ("warn", "O(vocab) work per decode step"),
     "JX-JIT": ("warn", "ref oracle not jit-wrapped"),
+    "JX-SHGATH": ("warn",
+                  "full unsharded weight materialized after a shard_map "
+                  "gather"),
     "SL-F401": ("warn", "unused import"),
     "SL-ASSERT": ("error", "assert guarding a runtime condition"),
     "SL-SYNTAX": ("error", "file does not parse"),
@@ -218,6 +221,37 @@ def _parse_formats(s: str) -> List[object]:
     return out
 
 
+_MESH_SEG_RE = re.compile(r"^[a-z]+(\d+)\.([A-Z])$")
+
+# Which logical dim a mesh-key shard spec letter shards: matmul dims
+# counted from the END of the shape (shapes are (..., M, K, N)),
+# attention batch/sequence dims from the front ((B, S, ...)).
+_MESH_SPEC_DIM_FROM_END = {"N": 1, "K": 2, "M": 3}
+_MESH_SPEC_DIM_ABS = {"B": 0, "S": 1}
+
+
+def _mesh_key_shards(seg: str, rank: int):
+    """Shard counts for a `mesh=<axis><size>.<spec>` cache-key segment
+    (`autotune.mesh_desc`), or None for single-device / unrecognized
+    segments — the audit then models the unsharded launch, which is
+    conservative (per-shard operands are never larger)."""
+    m = _MESH_SEG_RE.match(seg)
+    if not m:
+        return None
+    size, spec = int(m.group(1)), m.group(2)
+    if spec in _MESH_SPEC_DIM_ABS:
+        dim = _MESH_SPEC_DIM_ABS[spec]
+    elif spec in _MESH_SPEC_DIM_FROM_END:
+        dim = rank - _MESH_SPEC_DIM_FROM_END[spec]
+    else:
+        return None
+    if not 0 <= dim < rank or size <= 1:
+        return None
+    shards = [1] * rank
+    shards[dim] = size
+    return tuple(shards)
+
+
 def check_vmem_cache() -> List[Finding]:
     """VM-CACHE: audit every persisted autotune entry against the budget
     (a stale or foreign-budget entry fails at lowering on launch)."""
@@ -232,15 +266,19 @@ def check_vmem_cache() -> List[Finding]:
     findings: List[Finding] = []
     for key, blocks in sorted(data.items()):
         parts = key.split("|")
-        if len(parts) != 4 or len(blocks) != 3:
+        if len(parts) not in (4, 5) or len(blocks) != 3:
             continue
-        kernel, dims, fmts, _backend = parts
+        kernel, dims, fmts = parts[:3]
         try:
             shape = [int(x) for x in dims.split("x")]
         except ValueError:
             continue
+        shards = None
+        if len(parts) == 5 and parts[4].startswith("mesh="):
+            shards = _mesh_key_shards(parts[4][len("mesh="):], len(shape))
         ok, need = vmem.vmem_feasible(
-            kernel, tuple(blocks), _parse_formats(fmts), shape)
+            kernel, tuple(blocks), _parse_formats(fmts), shape,
+            shards=shards)
         if not ok:
             findings.append(Finding(
                 "VM-CACHE", key,
@@ -330,6 +368,52 @@ def check_models(archs: Optional[Sequence[str]] = None) -> List[Finding]:
     return findings
 
 
+def check_sharded() -> List[Finding]:
+    """JX-SHGATH over the shard_map'd serving forwards.
+
+    Traces `parallel.shard_ops.sharded_forward_fns` (one dense arch, one
+    MoE arch) on a best-effort mesh over however many devices the
+    platform exposes — the rule is structural (int all_gather then a
+    float of the gathered shape INSIDE the body), so the verdict does
+    not depend on the mesh size.  Traced on the ref backend, where a
+    full post-gather dequant is a visible jnp op; the sharded serving
+    path gathers outputs/head slices only, so this stays clean.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import QuantConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.launch.mesh import best_effort_mesh
+    from . import jaxpr_lint
+
+    from repro.models import model as M
+    from repro.parallel import shard_ops
+
+    q = QuantConfig(mode="vp", quantize_kv_cache=True, kv_layout="packed")
+    mesh = best_effort_mesh()
+    findings: List[Finding] = []
+    for arch in ("qwen2-0.5b", "qwen3-moe-30b-a3b"):
+        cfg = get_smoke_config(arch, quant=q)
+        params = M.quantize_params(
+            M.init_params(jax.random.PRNGKey(0), cfg), cfg, layout="packed")
+        try:
+            prefill_fn, decode_fn = shard_ops.sharded_forward_fns(
+                params, cfg, mesh)
+        except shard_ops.ShardSpecError:
+            continue  # smoke dims not divisible by this device count
+        caches = M.init_cache(cfg, B=1, max_len=32)
+        tokens = jnp.zeros((1, 8), jnp.int32)
+        token = jnp.zeros((1, 1), jnp.int32)
+        for stage, jaxpr in (
+            ("prefill", jax.make_jaxpr(prefill_fn)(params, tokens, caches)),
+            ("decode", jax.make_jaxpr(decode_fn)(params, token, caches)),
+        ):
+            findings.extend(_from_dicts(jaxpr_lint.lint_sharded_traced(
+                jaxpr, where=f"sharded:{arch}:{stage}")))
+    return findings
+
+
 # ---------------------------------------------------------------------------
 # Source lint + assembly
 # ---------------------------------------------------------------------------
@@ -356,6 +440,7 @@ def run_all(
     findings.extend(check_jaxpr_ops())
     if models:
         findings.extend(check_models(archs))
+        findings.extend(check_sharded())
     findings.sort(key=lambda f: (_SEV_ORDER[f.severity], f.rule, f.where))
     return findings
 

@@ -71,11 +71,30 @@ def _vp(formats: Sequence, idx: int) -> Optional[VPFormat]:
     return None
 
 
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _shard_shape(shape, shards):
+    """Per-shard logical shape: each dim ceil-divided by its shard count."""
+    if shape is None or shards is None:
+        return shape
+    if len(shards) != len(shape):
+        raise ValueError(
+            f"shards {tuple(shards)} must match shape rank {tuple(shape)}")
+    return tuple(-(-int(d) // max(1, int(s)))
+                 for d, s in zip(shape, shards))
+
+
 def kernel_vmem_bytes(
     kernel: str,
     blocks: Tuple[int, int, int],
     formats: Sequence = (),
     shape: Optional[Sequence[int]] = None,
+    shards: Optional[Sequence[int]] = None,
 ) -> Optional[int]:
     """Static VMEM working set of one kernel launch, or None if this
     kernel's layout is not modeled (unknown kernels are never pruned).
@@ -83,8 +102,29 @@ def kernel_vmem_bytes(
     `kernel`, `blocks`, `formats`, `shape` are exactly the values the
     autotune cache keys carry, so the autotuner can consult the model
     with what it already has in hand.
+
+    `shards` (same rank as `shape`) divides the logical shape by the
+    mesh-shard counts first: under shard_map each device launches on its
+    LOCAL operand, so tiles clamp to the per-shard dims (the same
+    power-of-two clamp `heuristic_blocks` applies) — a tiling that only
+    fits on-chip BECAUSE the mesh shrank the operand is admitted, and
+    one whose per-shard tile still overflows is rejected.
     """
     bm, bk, bn = int(blocks[0]), int(blocks[1]), int(blocks[2])
+    if shards is not None and shape is not None:
+        # Per-shard launch: the resolver re-clamps tiles to the LOCAL
+        # operand (`heuristic_blocks`' power-of-two clamp), so the model
+        # evaluates the tile that actually launches on each device —
+        # never the single-device tile a shard could not even stage.
+        shape = _shard_shape(shape, shards)
+        if "attention" in kernel or "prefill" in kernel:
+            if len(shape) >= 2:  # blocks[1] tiles the (sharded) seq dim
+                bk = min(bk, _pow2_at_least(int(shape[1])))
+        elif len(shape) >= 3:
+            m, k, n = (int(d) for d in shape[-3:])
+            bm = min(bm, _pow2_at_least(m))
+            bk = min(bk, _pow2_at_least(k))
+            bn = min(bn, _pow2_at_least(n))
     base = kernel.split("_bk")[0] if kernel.startswith(
         "block_vp_matmul") else kernel
     batched = "batched" in base
@@ -167,10 +207,11 @@ def vmem_feasible(
     formats: Sequence = (),
     shape: Optional[Sequence[int]] = None,
     budget: Optional[int] = None,
+    shards: Optional[Sequence[int]] = None,
 ) -> Tuple[bool, Optional[int]]:
     """(fits, modeled bytes).  Unmodeled kernels report (True, None) —
     the autotuner must never prune what it cannot reason about."""
-    need = kernel_vmem_bytes(kernel, blocks, formats, shape)
+    need = kernel_vmem_bytes(kernel, blocks, formats, shape, shards=shards)
     if need is None:
         return True, None
     budget = vmem_budget_bytes() if budget is None else budget

@@ -27,6 +27,12 @@ class QuantConfig:
                                    # (kernel-consumed) | "planes" (legacy
                                    # two-plane jnp-dequant golden baseline)
     act_mode: str = "none"         # activation quantization (none | vp)
+    tp_axis: Optional[str] = None  # set ONLY inside a shard_map'd forward:
+                                   # weight matmuls see tensor-parallel
+                                   # last-dim shards and all-gather their
+                                   # output along this mesh axis (see
+                                   # parallel.shard_ops.shard_param_specs
+                                   # for the matching placement rule)
 
     def __post_init__(self):
         assert self.mode in ("none", "fxp", "vp", "vp_block"), self.mode

@@ -66,6 +66,17 @@ def cache_path() -> str:
         os.path.expanduser("~"), ".cache", "repro-vp", "autotune.json")
 
 
+def _migrate_key(key: str) -> str:
+    """Shim for pre-mesh cache files: 4-part `kernel|dims|fmts|backend`
+    keys written before the mesh/shard segment existed describe
+    single-device timings, which is exactly what `|mesh=1` now means —
+    rewrite instead of invalidating them.  Keys of any other shape
+    (including ad-hoc ones) pass through untouched."""
+    if "|mesh=" in key or key.count("|") != 3:
+        return key
+    return f"{key}|mesh=1"
+
+
 def _load(path: str) -> Dict[str, list]:
     with _lock:
         if path not in _caches:
@@ -73,7 +84,7 @@ def _load(path: str) -> Dict[str, list]:
             try:
                 with open(path) as f:
                     raw = json.load(f)
-                data = {k: list(v) for k, v in raw.items()
+                data = {_migrate_key(k): list(v) for k, v in raw.items()
                         if isinstance(v, (list, tuple)) and len(v) == 3}
             except (OSError, ValueError):
                 pass  # missing or corrupt cache: start empty
@@ -129,21 +140,59 @@ def clear_cache() -> None:
         pass
 
 
+_mesh_local = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_scope(desc: str):
+    """Tag autotune keys with the active mesh/shard geometry.
+
+    Entered by the sharded execution paths (`parallel.shard_ops`, the
+    sweep driver) around per-shard kernel calls: inside the scope,
+    `make_key` appends `|mesh=<desc>` so a timing measured on a PER-SHARD
+    operand shape can never overwrite the single-device entry for the
+    same logical shape (tile feasibility and arithmetic intensity both
+    change with the shard).  Outside any scope the segment is `mesh=1`
+    — the canonical single-device marker legacy cache files migrate to.
+    """
+    prev = getattr(_mesh_local, "desc", None)
+    _mesh_local.desc = str(desc)
+    try:
+        yield
+    finally:
+        _mesh_local.desc = prev
+
+
+def mesh_desc(mesh, axis: str = "model", spec: str = "N") -> str:
+    """Canonical scope string for a mesh axis + shard spec, e.g.
+    `model8.N` (weight output dim sharded 8 ways over "model")."""
+    size = mesh.shape[axis] if axis in mesh.shape else 1
+    return f"{axis}{size}.{spec}"
+
+
+def current_mesh_desc() -> str:
+    return getattr(_mesh_local, "desc", None) or "1"
+
+
 def make_key(
     kernel: str,
     shape: Sequence[int],
     formats: Sequence,
     backend: str,
+    mesh: Optional[str] = None,
 ) -> str:
     """Cache key: everything that affects which tiling wins.
 
     `shape` is the logical operand shape ((M, K, N) or (G, M, K, N));
     `formats` any sequence of FXPFormat/VPFormat (their reprs are stable
-    and fully determine the in-kernel cascade structure).
+    and fully determine the in-kernel cascade structure); `mesh` the
+    mesh/shard geometry segment (defaults to the active `mesh_scope`,
+    `"1"` when single-device).
     """
     fmts = ",".join(repr(f) for f in formats)
     dims = "x".join(str(int(d)) for d in shape)
-    return f"{kernel}|{dims}|{fmts}|{backend}"
+    seg = mesh if mesh is not None else current_mesh_desc()
+    return f"{kernel}|{dims}|{fmts}|{backend}|mesh={seg}"
 
 
 def get_cached(key: str) -> Optional[Blocks]:
@@ -383,6 +432,7 @@ def tune(
     bench_fn: Callable[[Blocks], None],
     candidates: Optional[Iterable[Blocks]] = None,
     repeats: int = 3,
+    shards: Optional[Sequence[int]] = None,
 ) -> Blocks:
     """Measure `bench_fn(blocks)` over candidates, persist + return the best.
 
@@ -410,7 +460,7 @@ def tune(
     feasible, pruned = [], []
     for blocks in cands:
         ok, need = _vmem.vmem_feasible(
-            kernel, blocks, formats, shape, budget=budget)
+            kernel, blocks, formats, shape, budget=budget, shards=shards)
         (feasible if ok else pruned).append((blocks, need))
     if not feasible:
         raise RuntimeError(

@@ -85,9 +85,23 @@ def _resolve_blocks(kernel, shape, formats, backend, blocks, masks):
     native floor) only, never a tuned cache entry, whose grid the masks
     were not built on; `_check_masks` then validates the grid loudly
     either way.
+
+    Mesh awareness rides the cache key (`autotune.make_key` appends the
+    active `mesh_scope` segment) and the VMEM contract: `shape` here is
+    whatever the op was CALLED with, which under shard_map is the
+    per-shard local operand — so both the cache lookup and the
+    feasibility proof reason about the tile each device actually
+    launches, never the unsharded logical shape.
     """
-    return autotune.resolve_blocks(
+    resolved = autotune.resolve_blocks(
         kernel, shape, formats, backend, blocks, use_cache=masks is None)
+    if backend == "native":
+        # Off-TPU backends stage no VMEM; on TPU an over-budget tile
+        # dies at Mosaic lowering, so fail it here with the accounting.
+        contracts.require_vmem_feasible(
+            kernel, tuple(resolved), tuple(formats),
+            tuple(int(d) for d in shape), what=kernel)
+    return resolved
 
 
 def _check_masks(a_act, b_act, M, K, N, blocks):

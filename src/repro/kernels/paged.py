@@ -32,8 +32,6 @@ ever reads it back — tests poison it to prove that.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 
 def gather_pages(pool, page_ids):
     """Pool view through a block table.

@@ -153,7 +153,25 @@ def qdot(x: jax.Array, wq: Any, q: QuantConfig,
 
     `wq` is a float array (training / mode none) or the dict produced by
     `quantize_weight` (serving).
+
+    Under shard_map with `q.tp_axis` set, quantized weight dicts are the
+    tensor-parallel LAST-DIM shards placed by
+    `parallel.shard_ops.shard_param_specs`: the local matmul produces the
+    local output columns and the full activation is reassembled by an
+    all-gather — a pure column concatenation, so the result is bit-exact
+    against the unsharded matmul (each column block sees the identical
+    contraction order).  Float weights (mode none / the router) are
+    replicated and need no collective.
     """
+    out = _qdot_local(x, wq, q, train)
+    if q.tp_axis is not None and isinstance(wq, dict):
+        out = jax.lax.all_gather(out, q.tp_axis, axis=out.ndim - 1,
+                                 tiled=True)
+    return out
+
+
+def _qdot_local(x: jax.Array, wq: Any, q: QuantConfig,
+                train: bool = False) -> jax.Array:
     dtype = x.dtype
     if isinstance(wq, jax.Array) or not isinstance(wq, dict):
         w = wq
@@ -245,7 +263,19 @@ def embed_lookup(tokens, table, q: QuantConfig, train: bool = False):
     """Token embedding; table may be quantized like any other weight.
 
     Dispatches on the dict KEYS (a vp_block model may carry a per-element
-    VP embedding when the vocab is not tileable)."""
+    VP embedding when the vocab is not tileable).
+
+    Under `q.tp_axis` a quantized table is sharded along d_model (its
+    last dim); the row gather + dequant run on the local columns and the
+    embedding reassembles by all-gather (bit-exact concatenation)."""
+    if isinstance(table, dict) and q.tp_axis is not None:
+        out = _embed_local(tokens, table, q)
+        return jax.lax.all_gather(out, q.tp_axis, axis=out.ndim - 1,
+                                  tiled=True)
+    return _embed_local(tokens, table, q)
+
+
+def _embed_local(tokens, table, q: QuantConfig):
     if isinstance(table, dict):
         if "w_packed" in table:
             # Gather the PACKED rows first, then dequantize just those:

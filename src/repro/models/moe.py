@@ -98,14 +98,32 @@ def moe_block(
     buf = jax.vmap(scatter_group)(xt, se, stok, pos, keep)    # (G, E, C, d)
 
     # ---- expert FFNs: einsum over EP-sharded weights ----
-    def ffn(h):  # h (G, E, C, d)
+    def ffn(h):  # h (G, E_local, C, d)
         g = jnp.einsum("gecd,edf->gecf", h, _w(params["w_gate"], q, h.dtype))
         u = jnp.einsum("gecd,edf->gecf", h, _w(params["w_up"], q, h.dtype))
         act = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
         return jnp.einsum("gecf,efd->gecd", act,
                           _w(params["w_down"], q, h.dtype))
 
-    out_buf = ffn(buf)
+    E_local = params["w_gate"]["w_packed"].shape[0] \
+        if isinstance(params["w_gate"], dict) and "w_packed" in params["w_gate"] \
+        else (params["w_gate"]["m"].shape[0]
+              if isinstance(params["w_gate"], dict)
+              else params["w_gate"].shape[0])
+    if q.tp_axis is not None and E_local < E:
+        # Expert parallelism under shard_map: routing/dispatch above ran
+        # replicated, so every shard holds the full (G, E, C, d) buffer;
+        # each shard runs only its resident experts and the outputs
+        # reassemble by all-gather along the expert axis.  Per-expert
+        # FFNs are independent, so the concatenation is bit-exact
+        # against the all-experts einsum.
+        idx = jax.lax.axis_index(q.tp_axis)
+        buf_local = jax.lax.dynamic_slice_in_dim(
+            buf, idx * E_local, E_local, axis=1)
+        out_buf = jax.lax.all_gather(
+            ffn(buf_local), q.tp_axis, axis=1, tiled=True)
+    else:
+        out_buf = ffn(buf)
 
     # ---- combine: gather back and weight by gates ----
     def combine_group(ob, se_g, stok_g, pos_g, keep_g, sg_g):

@@ -57,9 +57,18 @@ class ServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  clock=None, check_finite: bool = False,
                  n_pages: Optional[int] = None,
-                 hbm_budget_bytes: Optional[int] = None):
+                 hbm_budget_bytes: Optional[int] = None,
+                 mesh=None):
         if decode_lookahead < 1:
             raise ValueError("decode_lookahead must be >= 1")
+        self.mesh = mesh
+        if mesh is not None:
+            # Shard the weights over the mesh up front (packed words
+            # along d_out over "model", MoE experts over their expert
+            # axis); the runner then serves tensor-parallel, plus
+            # data-parallel over slot buckets that divide "data".
+            from repro.parallel import shard_ops
+            params = shard_ops.place_params(params, cfg, mesh)
         self.params = params
         self.cfg = cfg
         self.kv = PagedKVCache(cfg, max_slots=max_slots, capacity=capacity,
@@ -73,7 +82,8 @@ class ServingEngine:
                 "use whole-prompt prefill for this config")
         self.prefill_chunk = prefill_chunk
         self.decode_lookahead = int(decode_lookahead)
-        self.runner = ModelRunner(cfg, self.kv, temperature=temperature)
+        self.runner = ModelRunner(cfg, self.kv, temperature=temperature,
+                                  mesh=mesh)
         self.scheduler = Scheduler(self.kv)
         self.clock = clock if clock is not None else WallClock()
         self.check_finite = bool(check_finite)
@@ -91,9 +101,17 @@ class ServingEngine:
         _, vp = kv_cache_formats(q)
         shape = (self.kv.max_slots, self.kv.capacity,
                  self.cfg.n_kv_heads, self.cfg.head_dim)
+        shards = None
+        if self.mesh is not None:
+            # Data-parallel decode shards the slot-batch dim, so each
+            # device stages only its slice of the working set.
+            from repro.parallel import shard_ops
+            dp = shard_ops.tp_size(self.mesh, "data")
+            if dp > 1:
+                shards = (dp, 1, 1, 1)
         fits, need = vmem_feasible(
             "vp_decode_attention", (128, min(128, self.kv.capacity), 1),
-            (vp,), shape)
+            (vp,), shape, shards=shards)
         if not fits:
             raise ValueError(
                 f"decode-attention working set ({need} B) exceeds the "

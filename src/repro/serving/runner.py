@@ -26,10 +26,22 @@ Every step is one compiled function with a fixed shape signature:
 Batch steps run at power-of-two slot buckets (compile per bucket, not
 per composition); inactive padding rows are distinct parked slots whose
 commits are masked to the dummy page / their own old rows.
+
+Mesh-native serving: constructed with a `mesh`, the runner swaps the
+model calls for `parallel.shard_ops.sharded_forward_fns` — the SAME
+compute inside `shard_map`, weights tensor-parallel over the "model"
+axis (packed words sharded along d_out, outputs all-gathered), MoE
+experts expert-parallel.  Gather/commit stay global: pools, block
+tables and lengths are replicated, only the model forward shards.
+Decode buckets whose size divides the "data" axis additionally shard
+the batch dim over it (data-parallel-over-slots x tensor-parallel-over-
+weights); every collective on these paths is a concatenation, so served
+tokens and logits stay bit-identical to the single-device engine on the
+ref backend.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,10 +100,20 @@ class ModelRunner:
     """Compiled-step cache + functional state threading for one engine."""
 
     def __init__(self, cfg: ModelConfig, kv: PagedKVCache,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, mesh=None,
+                 tp_axis: str = "model", data_axis: str = "data"):
         self.cfg = cfg
         self.kv = kv
         self.temperature = float(temperature)
+        self.mesh = mesh
+        self.tp_axis = tp_axis
+        self.data_axis = data_axis
+        if mesh is not None:
+            from repro.parallel import shard_ops
+            self._dp = shard_ops.tp_size(mesh, data_axis)
+        else:
+            self._dp = 1
+        self._sharded_fns = None
         # Donation lets XLA update pools in place; CPU ignores it (and
         # warns), so only request it off-CPU.
         self._donate = jax.default_backend() != "cpu"
@@ -107,6 +129,32 @@ class ModelRunner:
 
     def _jit(self, fn, donate):
         return jax.jit(fn, donate_argnums=donate if self._donate else ())
+
+    def _model_fns(self, params):
+        """(prefill_fn, decode_fn) — the plain model functions, or their
+        shard_map wrappers when the runner was built with a mesh.  Built
+        lazily at first trace (the wrappers' specs mirror the param
+        tree, which the runner only sees per call)."""
+        if self.mesh is None:
+            cfg = self.cfg
+
+            def prefill_fn(p, tokens, caches, chunked=False):
+                return prefill(p, tokens, caches, cfg, chunked=chunked)
+
+            def decode_fn(p, token, caches, batch_sharded=False):
+                return decode_step(p, token, caches, cfg)
+
+            return prefill_fn, decode_fn
+        if self._sharded_fns is None:
+            from repro.parallel import shard_ops
+            pf, df = shard_ops.sharded_forward_fns(
+                params, self.cfg, self.mesh, axis=self.tp_axis,
+                data_axis=self.data_axis if self._dp > 1 else None)
+            self._sharded_fns = (
+                lambda p, t, c, chunked=False: pf(p, t, c, chunked=chunked),
+                lambda p, t, c, batch_sharded=False: df(
+                    p, t, c, batch_sharded=batch_sharded))
+        return self._sharded_fns
 
     def _fresh_cache(self, prompt_pad: int):
         """Zero B=1 cache pytree for a whole-prompt prefill: paged subs
@@ -130,15 +178,16 @@ class ModelRunner:
         return fresh
 
     def _make_prefill(self, S: int):
-        kv, cfg = self.kv, self.cfg
+        kv = self.kv
         ps = kv.page_size
         Sp = min(-(-S // ps) * ps, kv.capacity) if kv.has_paged else S
         n_pg = Sp // ps if kv.has_paged else 0
         temperature = self.temperature
 
         def fn(params, tokens, pools, dense, bt_row, lengths, slot, key):
-            logits, filled = prefill(
-                params, tokens, self._fresh_cache(Sp), cfg)
+            prefill_fn, _ = self._model_fns(params)
+            logits, filled = prefill_fn(
+                params, tokens, self._fresh_cache(Sp))
             nxt = _sample(logits, key, temperature)
             for spec in kv.specs:
                 entry = filled[spec.gi][spec.sub]
@@ -155,7 +204,7 @@ class ModelRunner:
         return self._jit(fn, donate=(2, 3, 5))
 
     def _make_chunk(self, C: int):
-        kv, cfg = self.kv, self.cfg
+        kv = self.kv
         ps = kv.page_size
         temperature = self.temperature
 
@@ -164,8 +213,9 @@ class ModelRunner:
             slots = jnp.reshape(slot, (1,))
             view = build_view(kv.specs, kv.group_count, pools, dense,
                               block_table, lengths, slots)
-            logits, new_caches = prefill(params, tokens, view, cfg,
-                                         chunked=True)
+            prefill_fn, _ = self._model_fns(params)
+            logits, new_caches = prefill_fn(params, tokens, view,
+                                            chunked=True)
             nxt = _sample(logits, key, temperature)
             pos0 = lengths[slot]
             idxs = pos0 + jnp.arange(C, dtype=jnp.int32)
@@ -198,18 +248,22 @@ class ModelRunner:
         so the emitted logits are bit-identical to `n_steps` separate
         calls — run-ahead buys dispatch/gather/scatter amortization, not
         different math."""
-        kv, cfg = self.kv, self.cfg
+        kv = self.kv
         ps = kv.page_size
         temperature = self.temperature
+
+        batch_sharded = self._dp > 1 and Bp % self._dp == 0
 
         def fn(params, tokens, pools, dense, block_table, lengths, slots,
                active, key):
             view = build_view(kv.specs, kv.group_count, pools, dense,
                               block_table, lengths, slots)
+            _, decode_fn = self._model_fns(params)
 
             def body(carry, i):
                 toks, caches = carry
-                logits, caches = decode_step(params, toks, caches, cfg)
+                logits, caches = decode_fn(params, toks, caches,
+                                           batch_sharded=batch_sharded)
                 nxt = _sample(logits, jax.random.fold_in(key, i),
                               temperature)
                 return (nxt, caches), (nxt, logits)

@@ -14,6 +14,16 @@ import importlib.util
 import os
 import sys
 
+# Expose 8 host devices BEFORE anything imports jax, so the sharded
+# parity suite (tests/test_sharded_parity.py) runs in-process on real
+# shard_map meshes.  Harmless for the rest of the suite: ops dispatch
+# is backend-keyed, not device-count-keyed, and jit on one device of
+# eight compiles exactly as on one of one.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
 import pytest
 
 try:
