@@ -866,6 +866,95 @@ def engine_serving_bench(n_req=12, max_slots=4, smoke=False, seed=0):
     return speedup
 
 
+def train_qat_bench(steps=6, n_time=3):
+    """PR-9: VP-quantized TRAINING rows — the packed datapath is now
+    differentiable end to end (custom-VJP packed-word backward kernels),
+    so the fine-tune loop itself can run on packed words.
+
+    Three step variants on one small dense LM, identical data:
+
+      * f32 baseline (no quantization anywhere);
+      * QAT fake (legacy fake-quant STE in the float graph);
+      * QAT packed (packed-word forward AND backward kernels) WITH
+        VP-compressed DP gradients and VP-packed Adam moments — the
+        full compressed training configuration.
+
+    `derived` carries the machine-independent quantities: the final
+    losses (packed must track fake to ~1e-6 relative — same STE math,
+    different gemm summation order; asserted inline) and the storage
+    ratios — packed moments cut Adam state from 8 bytes/param to
+    2*storage_bits/8, the VP grad codec cuts DP wire bytes 32/
+    storage_bits vs f32.
+    """
+    from repro.configs.base import ModelConfig, QuantConfig
+    from repro.core.packing import storage_dtype
+    from repro.models import init_params
+    from repro.models.layers import canonical_formats
+    from repro.optim.optimizer import OptConfig, init_opt_state
+    from repro.train import make_train_step
+    from repro.train.compression import (
+        CompressionConfig, init_compressor_state,
+    )
+
+    cfg = ModelConfig(
+        name="train-bench", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=256, vocab=512, dtype="float32",
+        quant=QuantConfig(mode="none"))
+    opt = OptConfig(lr=1e-3, warmup_steps=1, total_steps=steps)
+    opt_vp = OptConfig(lr=1e-3, warmup_steps=1, total_steps=steps,
+                       moment_codec="vp")
+
+    def batch(i):
+        toks = jax.random.randint(jax.random.PRNGKey(100 + i),
+                                  (4, 33), 0, cfg.vocab)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def run(qat_mode, compressed):
+        qat = (QuantConfig(mode="vp", qat_mode=qat_mode)
+               if qat_mode else None)
+        cmp_cfg = CompressionConfig(codec="vp") if compressed else False
+        ocfg = opt_vp if compressed else opt
+        step = jax.jit(make_train_step(cfg, ocfg, compress_grads=cmp_cfg,
+                                       qat=qat))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        state = init_opt_state(params, ocfg)
+        cmp = init_compressor_state(params) if compressed else None
+        loss = None
+        t0 = None
+        for i in range(steps):
+            if i == 1:  # step 0 pays compile; time the steady state
+                t0 = time.perf_counter()
+            if compressed:
+                params, state, metrics, cmp = step(params, state,
+                                                   batch(i), cmp)
+            else:
+                params, state, metrics = step(params, state, batch(i))
+            loss = jax.block_until_ready(metrics["loss"])
+        us = (time.perf_counter() - t0) * 1e6 / (steps - 1)
+        return us, float(loss)
+
+    us_f32, loss_f32 = run(None, False)
+    us_fake, loss_fake = run("fake", False)
+    us_pk, loss_pk = run("packed", True)
+    assert abs(loss_fake - loss_pk) < 1e-3 * max(1.0, abs(loss_fake)), \
+        f"packed QAT diverged from the fake-quant STE baseline: " \
+        f"{loss_pk} vs {loss_fake}"
+
+    _, vp = canonical_formats(QuantConfig(mode="vp"))
+    word_bytes = np.dtype(storage_dtype(vp)).itemsize
+    m_fxp, m_vp = opt_vp.moment_formats()
+    mom_bytes = 2 * np.dtype(storage_dtype(m_vp)).itemsize
+    emit("train_step_f32", us_f32, f"final_loss={loss_f32:.6f}")
+    emit("train_step_qat_fake", us_fake, f"final_loss={loss_fake:.6f}")
+    emit("train_step_qat_packed_compressed", us_pk,
+         f"final_loss={loss_pk:.6f};loss_delta_vs_fake="
+         f"{abs(loss_pk - loss_fake):.2e};"
+         f"grad_wire_bytes_per_elem={word_bytes} (f32=4);"
+         f"adam_moment_bytes_per_param={mom_bytes} (f32=8)")
+    del m_fxp
+    return abs(loss_pk - loss_fake)
+
+
 def cspade_tile_stats(ens):
     """Tile-level CSPADE muting on real beamspace stimuli (TPU adaptation).
 
@@ -899,6 +988,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-shape dispatch check of the new kernel "
                          "paths only (CI job)")
+    ap.add_argument("--train", action="store_true",
+                    help="run only the PR-9 training rows (QAT + "
+                         "compressed-state train steps)")
     ap.add_argument("--json", default=None, metavar="FILE",
                     help="also write the emitted rows to FILE as JSON")
     args, _ = ap.parse_known_args()
@@ -906,7 +998,9 @@ def main() -> None:
     n_ber = 1000 if args.fast else 4000
 
     print("name,us_per_call,derived")
-    if args.smoke:
+    if args.train:
+        train_qat_bench()
+    elif args.smoke:
         smoke()
     else:
         ens = fig7_pdf_stats(n_ch)
@@ -931,6 +1025,7 @@ def main() -> None:
             f"continuous-batching engine must reach >=1.5x aggregate " \
             f"tokens/sec over the static driver on staggered arrivals; " \
             f"got {eng_x:.2f}x"
+        train_qat_bench()                 # packed-word QAT train steps
 
     if args.json:
         with open(args.json, "w") as f:

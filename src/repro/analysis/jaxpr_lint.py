@@ -34,6 +34,14 @@ Rules (severities are assigned by `analysis.rules`):
             The column/ring modes in `parallel.shard_ops` never do this
             (outputs resp. per-chunk tiles travel, not the whole
             weight); the `gather` baseline mode is the pattern flagged.
+  JX-BWDMAT in a BACKWARD trace over the packed datapath, a float
+            tensor of exactly a packed weight's shape produced by
+            anything other than `dot_general` or a `pallas_call`: the
+            VJP fell back to dequantize-then-autodiff, materializing the
+            f32 weight plane the custom backward kernels
+            (`kernels.vp_bwd_matmul`) exist to avoid.  dL/dW is
+            legitimately weight-shaped, hence the producer exemptions
+            (a contraction or a kernel launch stages tiles only).
 """
 from __future__ import annotations
 
@@ -208,6 +216,61 @@ def lint_sharded_traced(jaxpr, where: str = "") -> List[Dict[str, str]]:
                             f"integer shape inside a shard_map body — "
                             f"the full unsharded weight was dequantized "
                             f"on every device after the gather"))
+    return findings
+
+
+# Producers allowed to emit weight-shaped floats in a backward trace:
+# a contraction IS the weight gradient, and a kernel launch's HBM output
+# (dL/dW from `vp_matmul_dw_pallas`) stages tiles on chip only.  The
+# call-like wrappers merely FORWARD a sub-jaxpr's result — `iter_eqns`
+# descends into their bodies, so the true producer inside is still
+# linted (a jitted dequant chain is flagged on its elementwise eqns; a
+# jitted backward kernel is exempt on its pallas_call).
+_BWD_LEGIT_PRODUCERS = frozenset({
+    "dot_general", "pallas_call",
+    "pjit", "closed_call", "core_call", "remat", "remat2",
+    "custom_vjp_call", "custom_vjp_call_jaxpr", "custom_jvp_call",
+})
+
+
+def lint_bwd_traced(
+    jaxpr,
+    weight_shapes: Sequence[Tuple[int, ...]] = (),
+    where: str = "",
+) -> List[Dict[str, str]]:
+    """JX-BWDMAT over one BACKWARD trace (a `jax.grad` jaxpr).
+
+    Any float outvar with exactly a packed-weight shape whose producer
+    is not in `_BWD_LEGIT_PRODUCERS` means the VJP dequantized the full
+    weight plane (autodiff through `dequant_words`) instead of running
+    the packed backward kernel.  Eqns inside pallas_call bodies are
+    exempt — on the interpret backend tiles clamp to the full (small)
+    test shape, and per-tile VMEM dequants are the design.
+    """
+    findings: List[Dict[str, str]] = []
+    wshapes = {tuple(s) for s in weight_shapes
+               if int(np.prod(s)) >= _WMAT_MIN_ELEMS}
+    seen: Set[Tuple[str, Tuple[int, ...]]] = set()
+    for eqn, in_pallas in iter_eqns(jaxpr):
+        if in_pallas or eqn.primitive.name in _BWD_LEGIT_PRODUCERS:
+            continue
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            shape = tuple(getattr(aval, "shape", ()))
+            if dtype is None or shape not in wshapes:
+                continue
+            if not jnp.issubdtype(dtype, jnp.floating):
+                continue
+            key = (where, shape)
+            if key not in seen:
+                seen.add(key)
+                findings.append(_finding(
+                    "JX-BWDMAT", where,
+                    f"{eqn.primitive.name} materializes a float {shape} "
+                    f"tensor matching a packed weight in a backward "
+                    f"trace — the VJP dequantized the full weight plane "
+                    f"instead of running the packed backward kernel"))
     return findings
 
 

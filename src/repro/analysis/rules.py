@@ -56,6 +56,9 @@ RULES: Dict[str, Tuple[Severity, str]] = {
     "JX-SHGATH": ("warn",
                   "full unsharded weight materialized after a shard_map "
                   "gather"),
+    "JX-BWDMAT": ("warn",
+                  "full-weight float materialization in a backward "
+                  "trace"),
     "SL-F401": ("warn", "unused import"),
     "SL-ASSERT": ("error", "assert guarding a runtime condition"),
     "SL-SYNTAX": ("error", "file does not parse"),
@@ -173,6 +176,8 @@ def check_vmem_defaults() -> List[Finding]:
         ("vp_matmul", (vp, vp)),
         ("vp_matmul_packed", (vp, vp)),
         ("vp_dequant_matmul", (vp,)),
+        ("vp_matmul_dx", (vp,)),
+        ("vp_matmul_dw", (vp,)),
         ("vp_quant_matmul", (vp, vp)),
         (f"block_vp_matmul_bk{QuantConfig().block}", (vp, vp)),
     )
@@ -321,6 +326,8 @@ def _op_thunks():
          lambda: ops.vp_matmul(w, None, w, None, vp, vp)),
         ("vp_dequant_matmul",
          lambda: ops.vp_dequant_matmul(x, w, vp)),
+        ("vp_matmul_dx", lambda: ops.vp_matmul_dx(x, w, vp)),
+        ("vp_matmul_dw", lambda: ops.vp_matmul_dw(w, x, vp)),
         ("vp_quant_matmul",
          lambda: ops.vp_quant_matmul(x, x, fxp, vp, fxp, vp)),
         ("block_vp_matmul",
@@ -344,6 +351,51 @@ def check_ref_jit() -> List[Finding]:
     from . import jaxpr_lint
 
     return _from_dicts(jaxpr_lint.lint_ref_jit())
+
+
+def check_backward() -> List[Finding]:
+    """JX-BWDMAT over the packed-datapath gradient trace.
+
+    Traces `jax.grad` through `vp_dequant_matmul` (packed pretrained
+    weights — the serving fine-tune path) under
+    `force_backend("interpret")` so the pallas backward launches are
+    in-graph; any full-weight-shaped float outside a dot_general /
+    pallas_call means the VJP fell back to dequantize-then-autodiff.
+    The activation dims are chosen NOT to collide with the weight shape
+    so activation/cotangent floats can never alias a weight match.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import QuantConfig
+    from repro.core.packing import storage_dtype
+    from repro.kernels import ops, substrate
+    from repro.models.layers import canonical_formats
+    from . import jaxpr_lint
+
+    _, vp = canonical_formats(QuantConfig(mode="vp"))
+    w = jnp.zeros((64, 64), storage_dtype(vp))
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    fxp, _ = canonical_formats(QuantConfig(mode="vp"))
+    b = jnp.zeros((64, 64), jnp.float32)
+
+    def loss(x):
+        return ops.vp_dequant_matmul(x, w, vp).sum()
+
+    def ste_loss(x, b):
+        return ops.vp_quant_matmul(x, b, fxp, vp, fxp, vp).sum()
+
+    findings: List[Finding] = []
+    with substrate.force_backend("interpret"):
+        for name, jaxpr in (
+            ("vp_dequant_matmul", jax.make_jaxpr(jax.grad(loss))(x)),
+            ("vp_quant_matmul",
+             jax.make_jaxpr(jax.grad(ste_loss, argnums=(0, 1)))(x, b)),
+        ):
+            findings.extend(_from_dicts(jaxpr_lint.lint_bwd_traced(
+                jaxpr, weight_shapes=[(64, 64)], where=f"bwd:{name}")))
+    return findings
 
 
 def check_models(archs: Optional[Sequence[str]] = None) -> List[Finding]:
@@ -438,6 +490,7 @@ def run_all(
     findings.extend(check_sources())
     findings.extend(check_ref_jit())
     findings.extend(check_jaxpr_ops())
+    findings.extend(check_backward())
     if models:
         findings.extend(check_models(archs))
         findings.extend(check_sharded())

@@ -155,6 +155,31 @@ def kernel_vmem_bytes(
         scratch = bm * bn * _F32
         return 2 * in_bytes + 2 * out + scratch + temps
 
+    if base == "vp_matmul_dx":
+        # g (bm, bn) f32 and packed-w (bk, bn) tiles in, (bm, bk) out
+        # with an f32 accumulator scratch; the dequantized w tile is the
+        # only temp (kernels/vp_bwd_matmul._vp_matmul_dx_kernel).
+        w_fmt = _vp(formats, 0)
+        if w_fmt is None:
+            return None
+        in_bytes = bm * bn * _F32 + bk * bn * _word_bytes(w_fmt)
+        temps = bk * bn * _F32                       # dequantized W tile
+        out = bm * bk * _F32
+        scratch = bm * bk * _F32
+        return 2 * in_bytes + 2 * out + scratch + temps
+
+    if base == "vp_matmul_dw":
+        # packed-a (bm, bk) and g (bm, bn) f32 tiles in, (bk, bn) out
+        # with an f32 accumulator scratch; temp = dequantized a tile.
+        a_fmt = _vp(formats, 0)
+        if a_fmt is None:
+            return None
+        in_bytes = bm * bk * _word_bytes(a_fmt) + bm * bn * _F32
+        temps = bm * bk * _F32                       # dequantized A tile
+        out = bk * bn * _F32
+        scratch = bk * bn * _F32
+        return 2 * in_bytes + 2 * out + scratch + temps
+
     if base == "vp_quant_matmul":
         # Float operands in, quantize-dequantize cascade in-register:
         # int32 (m, i) intermediates per operand tile + the f32 results.

@@ -27,6 +27,15 @@ class QuantConfig:
                                    # (kernel-consumed) | "planes" (legacy
                                    # two-plane jnp-dequant golden baseline)
     act_mode: str = "none"         # activation quantization (none | vp)
+    qat_mode: str = "fake"         # QAT weight path when training float
+                                   # masters under mode="vp":
+                                   # "fake" = legacy fake-quant STE in the
+                                   # float graph; "packed" = quantize to
+                                   # packed words + run the packed Pallas
+                                   # serving kernel fwd AND the packed-word
+                                   # backward kernels (kernels.ops
+                                   # .vp_qat_matmul) — training numerics
+                                   # == serving numerics
     tp_axis: Optional[str] = None  # set ONLY inside a shard_map'd forward:
                                    # weight matmuls see tensor-parallel
                                    # last-dim shards and all-gather their
@@ -37,6 +46,7 @@ class QuantConfig:
     def __post_init__(self):
         assert self.mode in ("none", "fxp", "vp", "vp_block"), self.mode
         assert self.kv_layout in ("packed", "planes"), self.kv_layout
+        assert self.qat_mode in ("fake", "packed"), self.qat_mode
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from .formats import FXPFormat, VPFormat
 from .fxp import fxp_quantize
 from .convert import fxp2vp, vp_to_float
+from .packing import dequant_words, pack_vp
 from .vp_tensor import VPTensor, significand_dtype
 
 
@@ -67,9 +68,74 @@ def _ste_bwd(_, g):
 _ste.defvjp(_ste_fwd, _ste_bwd)
 
 
-def vp_fake_quant_ste(x, fxp: FXPFormat, vp: VPFormat):
-    """QAT straight-through estimator around `vp_fake_quant`."""
-    return _ste(x, vp_fake_quant(x, fxp, vp))
+@jax.custom_vjp
+def _ste_clipped(x, y, lo, hi):
+    """Forward y; backward identity onto x INSIDE [lo, hi], zero outside."""
+    return y
+
+
+def _ste_clipped_fwd(x, y, lo, hi):
+    return y, (x, lo, hi)
+
+
+def _ste_clipped_bwd(res, g):
+    x, lo, hi = res
+    inside = jnp.logical_and(x >= lo, x <= hi)
+    return jnp.where(inside, g, 0).astype(g.dtype), None, None, None
+
+
+_ste_clipped.defvjp(_ste_clipped_fwd, _ste_clipped_bwd)
+
+
+def vp_fake_quant_ste(x, fxp: FXPFormat, vp: VPFormat,
+                      clip_grad: bool = False):
+    """QAT straight-through estimator around `vp_fake_quant`.
+
+    ``clip_grad=False`` is the classic STE (gradient passes everywhere —
+    the historical behaviour, kept as the default so existing fake-quant
+    graphs are unchanged).  ``clip_grad=True`` zeroes the gradient where
+    x saturated the FXP(W, F) envelope — those elements moved to the clip
+    rail, their quantizer Jacobian really is 0, and letting gradient
+    through drags saturated weights further out of range.
+    """
+    y = vp_fake_quant(x, fxp, vp)
+    if clip_grad:
+        return _ste_clipped(
+            x, y,
+            jnp.asarray(fxp.min, jnp.asarray(x).dtype),
+            jnp.asarray(fxp.max, jnp.asarray(x).dtype))
+    return _ste(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Packed-word tensor codec (shared by gradient compression and optimizer
+# moment storage — lives here, below both, to avoid an optim <-> train
+# import cycle)
+# ---------------------------------------------------------------------------
+
+def vp_pack_tensor(x, fxp: FXPFormat, vp: VPFormat):
+    """Real tensor (any rank, any float dtype) -> (packed words, scale).
+
+    The memory codec behind VP-packed gradient compression
+    (`train.compression`) and packed optimizer moments
+    (`optim.optimizer`): a per-tensor POWER-OF-TWO scale (exact under VP
+    semantics — dividing by 2^k only shifts exponents, it never rounds)
+    brings max|x| into (-1, 1], then real -> FXP(W, F) -> VP(M, f) ->
+    `core.packing` words at `vp.storage_bits` bits per element.  Returns
+    (words, f32 scalar scale); an all-zero tensor gets scale 1.0.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))))
+    scale = jnp.where(amax > 0, s, 1.0).astype(jnp.float32)
+    raw = fxp_quantize(xf / scale, fxp)
+    m, i = fxp2vp(raw, fxp, vp)
+    return pack_vp(m, i, vp), scale
+
+
+def vp_unpack_tensor(w, scale, vp: VPFormat, dtype=jnp.float32):
+    """Invert `vp_pack_tensor`: (words, scale) -> real tensor."""
+    return dequant_words(w, vp, dtype) * scale.astype(dtype)
 
 
 # ---------------------------------------------------------------------------

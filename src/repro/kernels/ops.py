@@ -25,12 +25,27 @@ Two PR-3 layers live here:
     shape — so small operands (the MVM engine's (2U, B) x (B, 2)) stop
     padding up to 256^3 tiles.  CSPADE masks pin their grid: pass
     explicit `blocks` alongside masks.
+
+The PR-9 layer: the packed matmul ops are DIFFERENTIABLE.  Each carries
+a `jax.custom_vjp` rule whose backward passes are themselves Pallas
+kernels over packed words (`vp_bwd_matmul`): dL/dx comes from the
+transposed unpack-cascade kernel (`vp_matmul_dx`) without ever
+materializing the f32 weight plane; packed-word operands get symbolic
+`float0` cotangents (frozen integer storage); the float operands of
+`vp_quant_matmul` / `vp_qat_matmul` get straight-through-estimator
+gradients, with the quantized residuals saved as PACKED words
+(`storage_bits` per element instead of a float plane).  The rules are
+grad-checked bit-identical to autodiff through the dequant oracles on
+the ref backend (tests/test_train_vjp.py) and linted by JX-BWDMAT.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis import contracts
 from repro.core.formats import FXPFormat, VPFormat
@@ -40,12 +55,32 @@ from .vp_attention import flash_prefill_pallas, vp_decode_attention_pallas
 from .vp_quant import vp_quant_pallas, vp_quant_packed_pallas
 from .vp_dequant import vp_dequant_pallas, vp_dequant_packed_pallas
 from .vp_dequant_matmul import vp_dequant_matmul_pallas
+from .vp_bwd_matmul import vp_matmul_dx_pallas, vp_matmul_dw_pallas
 from .vp_matmul import vp_matmul_pallas, vp_matmul_batched_pallas
 from .vp_block_matmul import block_vp_matmul_pallas
 from .vp_quant_matmul import (
     vp_quant_matmul_pallas,
     vp_quant_matmul_batched_pallas,
 )
+
+
+def _float0_zeros(x):
+    """Symbolic-zero cotangent for an integer primal (packed VP words are
+    frozen storage: there is no meaningful gradient w.r.t. bit patterns)."""
+    return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+def _static_blocks(blocks):
+    """Hashable `blocks` for custom_vjp nondiff argnums."""
+    return None if blocks is None else tuple(int(b) for b in blocks)
+
+
+def _static_dtype(dtype):
+    """Canonical dtype NAME for custom_vjp nondiff argnums — `np.dtype`
+    instances are rejected by the custom_vjp arg flattener ("not a valid
+    JAX type"), strings pass through and every consumer re-canonicalizes.
+    """
+    return jnp.dtype(dtype).name
 
 
 def _pad2(x, br, bc, value=0):
@@ -234,6 +269,12 @@ def vp_matmul(
     through the autotuner (cache, else shape-clamped heuristic).
     """
     contracts.check_formats(a_fmt, b_fmt, what="vp_matmul")
+    if a_i is None and b_i is None and a_act is None and b_act is None:
+        # Packed unmasked path carries the custom-VJP rule (float0
+        # cotangents for the frozen word planes); forward is unchanged.
+        return _vp_matmul_packed_vjp(
+            a_m, b_m, a_fmt, b_fmt, _static_dtype(out_dtype),
+            _static_blocks(blocks), interpret)
     M, K = a_m.shape
     _, N = b_m.shape
     backend = substrate.resolve_backend(interpret)
@@ -278,6 +319,123 @@ def vp_matmul(
     return out[:M, :N]
 
 
+def vp_matmul_dx(
+    g, w,
+    w_fmt: VPFormat,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """Backward op: upstream cotangent g (M, N) @ dequant(w (K, N))^T.
+
+    The TRANSPOSED serving matmul — the dL/dx half of every packed-weight
+    VJP.  The same packed word plane the forward read is consumed
+    directly by the kernel (unpack + bit-assembled scale in VMEM,
+    contracted over its OUTPUT dim via `dot_general`), so the backward
+    pass moves the same `storage_bits`-per-element HBM traffic as the
+    forward and never materializes the f32 weight plane.
+    """
+    contracts.require_format_serviceable(w_fmt, "vp_matmul_dx")
+    M, N = g.shape
+    K, _ = w.shape
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        # Tile-independent oracle: exactly the dot_general XLA's
+        # transpose rule emits for the forward, so VJP grad checks are
+        # bit-identical against autodiff-through-dequant on this backend.
+        return ref.vp_matmul_dx_ref(g, w, w_fmt, out_dtype=out_dtype)
+    blocks = _resolve_blocks(
+        "vp_matmul_dx", (M, K, N), (w_fmt,), backend, blocks, None)
+    bm, bk, bn = blocks
+    gp, wp = _pad2(g, bm, bn), _pad2(w, bk, bn)
+    out = vp_matmul_dx_pallas(
+        gp, wp, w_fmt,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:M, :K]
+
+
+def vp_matmul_dw(
+    a_w, g,
+    a_fmt: VPFormat,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=jnp.float32,
+):
+    """Backward op: dequant(a_w (M, K) packed words)^T @ g (M, N).
+
+    The dL/dB half of the fused quantize-matmul VJP under the
+    straight-through estimator: `a_w` is the QUANTIZED first operand
+    saved as the VJP residual in packed form (`storage_bits` per element
+    instead of a float activation plane), unpacked per tile and reduced
+    over the batch dim into an f32 accumulator.
+    """
+    contracts.require_format_serviceable(a_fmt, "vp_matmul_dw")
+    M, K = a_w.shape
+    _, N = g.shape
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        return ref.vp_matmul_dw_ref(a_w, g, a_fmt, out_dtype=out_dtype)
+    blocks = _resolve_blocks(
+        "vp_matmul_dw", (M, K, N), (a_fmt,), backend, blocks, None)
+    bm, bk, bn = blocks
+    ap, gp = _pad2(a_w, bm, bk), _pad2(g, bm, bn)
+    out = vp_matmul_dw_pallas(
+        ap, gp, a_fmt,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:K, :N]
+
+
+def _vp_dequant_matmul_impl(x, w, w_fmt, out_dtype, blocks, interpret):
+    M, K = x.shape
+    _, N = w.shape
+    backend = substrate.resolve_backend(interpret)
+    if backend == "ref":
+        # The ref's math is tile-independent: skip block resolution
+        # entirely (no cache reads, no per-tiling jit signatures).
+        return ref.vp_dequant_matmul_ref(x, w, w_fmt, out_dtype=out_dtype)
+    blocks = _resolve_blocks(
+        "vp_dequant_matmul", (M, K, N), (w_fmt,), backend, blocks, None)
+    bm, bk, bn = blocks
+    xp, wp = _pad2(x, bm, bk), _pad2(w, bk, bn)
+    out = vp_dequant_matmul_pallas(
+        xp, wp, w_fmt,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype)
+    return out[:M, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _vp_dequant_matmul_vjp(x, w, w_fmt, out_dtype, x_dtype, blocks,
+                           interpret):
+    return _vp_dequant_matmul_impl(
+        x, w, w_fmt, np.dtype(out_dtype), blocks, interpret)
+
+
+def _vp_dequant_matmul_fwd(x, w, w_fmt, out_dtype, x_dtype, blocks,
+                           interpret):
+    out = _vp_dequant_matmul_impl(
+        x, w, w_fmt, np.dtype(out_dtype), blocks, interpret)
+    # The packed words ARE the residual — `storage_bits` per element,
+    # where autodiff through a dequant would have checkpointed the f32
+    # weight plane.
+    return out, (w,)
+
+
+def _vp_dequant_matmul_bwd(w_fmt, out_dtype, x_dtype, blocks, interpret,
+                           res, g):
+    (w,) = res
+    dx = vp_matmul_dx(
+        g, w, w_fmt, blocks=blocks, interpret=interpret,
+        out_dtype=np.dtype(x_dtype))
+    # Packed words are frozen integer storage: symbolic-zero cotangent.
+    return dx, _float0_zeros(w)
+
+
+_vp_dequant_matmul_vjp.defvjp(_vp_dequant_matmul_fwd, _vp_dequant_matmul_bwd)
+
+
 def vp_dequant_matmul(
     x, w,
     w_fmt: VPFormat,
@@ -294,25 +452,81 @@ def vp_dequant_matmul(
     tuned/clamped tiling instead of padding up to 256^3 (see
     `autotune.tune_serving_decode` for the M=1..B profile).  `out_dtype`
     defaults to the activation dtype (the models' compute dtype).
+
+    DIFFERENTIABLE in x: the custom VJP computes dL/dx with the
+    transposed packed-word kernel (`vp_matmul_dx`) from the same word
+    plane, and gives the frozen integer words a symbolic `float0`
+    cotangent — so QAT/fine-tune graphs backprop through the serving
+    path without an f32 weight plane in either direction.
     """
     contracts.require_format_serviceable(w_fmt, "vp_dequant_matmul")
-    M, K = x.shape
-    _, N = w.shape
     out_dtype = x.dtype if out_dtype is None else out_dtype
+    return _vp_dequant_matmul_vjp(
+        x, w, w_fmt, _static_dtype(out_dtype), _static_dtype(x.dtype),
+        _static_blocks(blocks), interpret)
+
+
+def _vp_quant_matmul_impl(
+        a, b, a_fxp, a_vp, b_fxp, b_vp, out_dtype, blocks, interpret):
+    M, K = a.shape
+    _, N = b.shape
     backend = substrate.resolve_backend(interpret)
-    if backend == "ref":
-        # The ref's math is tile-independent: skip block resolution
-        # entirely (no cache reads, no per-tiling jit signatures).
-        return ref.vp_dequant_matmul_ref(x, w, w_fmt, out_dtype=out_dtype)
     blocks = _resolve_blocks(
-        "vp_dequant_matmul", (M, K, N), (w_fmt,), backend, blocks, None)
+        "vp_quant_matmul", (M, K, N), (a_fxp, a_vp, b_fxp, b_vp),
+        backend, blocks, None)
+    if backend == "ref":
+        return ref.vp_quant_matmul_ref(
+            a, b, a_fxp, a_vp, b_fxp, b_vp,
+            tiles=blocks, out_dtype=out_dtype)
     bm, bk, bn = blocks
-    xp, wp = _pad2(x, bm, bk), _pad2(w, bk, bn)
-    out = vp_dequant_matmul_pallas(
-        xp, wp, w_fmt,
+    ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
+    out = vp_quant_matmul_pallas(
+        ap, bp, a_fxp, a_vp, b_fxp, b_vp,
         interpret=(backend == "interpret"), blocks=blocks,
         out_dtype=out_dtype)
     return out[:M, :N]
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10))
+def _vp_quant_matmul_vjp(
+        a, b, a_fxp, a_vp, b_fxp, b_vp, out_dtype, a_dtype, b_dtype,
+        blocks, interpret):
+    return _vp_quant_matmul_impl(
+        a, b, a_fxp, a_vp, b_fxp, b_vp, np.dtype(out_dtype), blocks,
+        interpret)
+
+
+def _vp_quant_matmul_fwd(
+        a, b, a_fxp, a_vp, b_fxp, b_vp, out_dtype, a_dtype, b_dtype,
+        blocks, interpret):
+    out = _vp_quant_matmul_impl(
+        a, b, a_fxp, a_vp, b_fxp, b_vp, np.dtype(out_dtype), blocks,
+        interpret)
+    # STE residuals are the QUANTIZED operands saved as PACKED words —
+    # `storage_bits` per element each, where autodiff through a fake
+    # quant would checkpoint both float planes.
+    a_w = vp_quant(a, a_fxp, a_vp, interpret=interpret, packed=True)
+    b_w = vp_quant(b, b_fxp, b_vp, interpret=interpret, packed=True)
+    return out, (a_w, b_w)
+
+
+def _vp_quant_matmul_bwd(
+        a_fxp, a_vp, b_fxp, b_vp, out_dtype, a_dtype, b_dtype, blocks,
+        interpret, res, g):
+    a_w, b_w = res
+    # Straight-through estimator: the quantizer Jacobians are taken as
+    # identity, so both grads are packed-word matmuls over the quantized
+    # residuals — da = g qb^T by the transposed unpack-cascade kernel,
+    # db = qa^T g by the second-operand kernel, both reduced in f32.
+    da = vp_matmul_dx(
+        g, b_w, b_vp, interpret=interpret, out_dtype=np.dtype(a_dtype))
+    db = vp_matmul_dw(
+        a_w, g, a_vp, interpret=interpret, out_dtype=np.dtype(b_dtype))
+    return da, db
+
+
+_vp_quant_matmul_vjp.defvjp(_vp_quant_matmul_fwd, _vp_quant_matmul_bwd)
 
 
 def vp_quant_matmul(
@@ -330,9 +544,19 @@ def vp_quant_matmul(
     `vp_matmul`, without materializing the quantized planes in HBM.
     CSPADE masks follow the `blocks` tile grid and require tile-aligned
     operands (mask calibration needs the planes anyway — see mvm_engine).
+
+    DIFFERENTIABLE (unmasked path) under the straight-through estimator:
+    both cotangents come from packed-word Pallas kernels over the
+    quantized residuals (see `_vp_quant_matmul_bwd`).  The CSPADE-masked
+    path stays forward-only — masks are calibration-time artifacts.
     """
     contracts.require_quant_safe(a_fxp, a_vp, "vp_quant_matmul")
     contracts.require_quant_safe(b_fxp, b_vp, "vp_quant_matmul")
+    if a_act is None and b_act is None:
+        return _vp_quant_matmul_vjp(
+            a, b, a_fxp, a_vp, b_fxp, b_vp, _static_dtype(out_dtype),
+            _static_dtype(a.dtype), _static_dtype(b.dtype),
+            _static_blocks(blocks), interpret)
     M, K = a.shape
     _, N = b.shape
     backend = substrate.resolve_backend(interpret)
@@ -352,6 +576,115 @@ def vp_quant_matmul(
         interpret=(backend == "interpret"), blocks=blocks,
         out_dtype=out_dtype)
     return out[:M, :N]
+
+
+def _vp_matmul_packed_impl(a_w, b_w, a_fmt, b_fmt, out_dtype, blocks,
+                           interpret):
+    M, K = a_w.shape
+    _, N = b_w.shape
+    backend = substrate.resolve_backend(interpret)
+    blocks = _resolve_blocks(
+        "vp_matmul_packed", (M, K, N), (a_fmt, b_fmt), backend, blocks, None)
+    if backend == "ref":
+        return ref.vp_matmul_packed_ref(
+            a_w, b_w, a_fmt, b_fmt, tiles=blocks, out_dtype=out_dtype)
+    bm, bk, bn = blocks
+    ap, bp = _pad2(a_w, bm, bk), _pad2(b_w, bk, bn)
+    out = vp_matmul_pallas(
+        ap, None, bp, None, a_fmt, b_fmt,
+        interpret=(backend == "interpret"), blocks=blocks,
+        out_dtype=out_dtype, packed=True)
+    return out[:M, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _vp_matmul_packed_vjp(a_w, b_w, a_fmt, b_fmt, out_dtype, blocks,
+                          interpret):
+    return _vp_matmul_packed_impl(
+        a_w, b_w, a_fmt, b_fmt, np.dtype(out_dtype), blocks, interpret)
+
+
+def _vp_matmul_packed_fwd(a_w, b_w, a_fmt, b_fmt, out_dtype, blocks,
+                          interpret):
+    out = _vp_matmul_packed_impl(
+        a_w, b_w, a_fmt, b_fmt, np.dtype(out_dtype), blocks, interpret)
+    return out, (a_w, b_w)
+
+
+def _vp_matmul_packed_bwd(a_fmt, b_fmt, out_dtype, blocks, interpret,
+                          res, g):
+    # Both operands are frozen integer word planes — there is no
+    # gradient w.r.t. bit patterns, only the explicit statement that the
+    # rule exists (so traced training graphs do not die trying to
+    # transpose through pallas_call).
+    a_w, b_w = res
+    return _float0_zeros(a_w), _float0_zeros(b_w)
+
+
+_vp_matmul_packed_vjp.defvjp(_vp_matmul_packed_fwd, _vp_matmul_packed_bwd)
+
+
+def _vp_qat_matmul_impl(x, w, fxp, vp, blocks, interpret):
+    w_q = vp_quant(w.astype(jnp.float32), fxp, vp,
+                   interpret=interpret, packed=True)
+    out = _vp_dequant_matmul_impl(
+        x, w_q, vp, np.dtype(x.dtype), blocks, interpret)
+    return out, w_q
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _vp_qat_matmul_vjp(x, w, fxp, vp, w_dtype, blocks, interpret):
+    out, _ = _vp_qat_matmul_impl(x, w, fxp, vp, blocks, interpret)
+    return out
+
+
+def _vp_qat_matmul_fwd(x, w, fxp, vp, w_dtype, blocks, interpret):
+    out, w_q = _vp_qat_matmul_impl(x, w, fxp, vp, blocks, interpret)
+    # Residual = activations + the PACKED quantized weight (what the
+    # forward actually multiplied by) — never the f32 weight plane.
+    return out, (x, w_q)
+
+
+def _vp_qat_matmul_bwd(fxp, vp, w_dtype, blocks, interpret, res, g):
+    x, w_q = res
+    dx = vp_matmul_dx(
+        g, w_q, vp, blocks=blocks, interpret=interpret, out_dtype=x.dtype)
+    # STE on the master weight: the quantizer's Jacobian is identity, so
+    # dW = x^T g reduced in f32 — a plain dense contraction (x is real;
+    # no packed operand exists on this side), handed back in the master
+    # dtype for the optimizer to step and the next fwd to re-quantize.
+    dw = jax.lax.dot_general(
+        x.astype(jnp.float32), g.astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(np.dtype(w_dtype))
+    return dx, dw
+
+
+_vp_qat_matmul_vjp.defvjp(_vp_qat_matmul_fwd, _vp_qat_matmul_bwd)
+
+
+def vp_qat_matmul(
+    x, w,
+    fxp: FXPFormat, vp: VPFormat,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    interpret: Optional[bool] = None,
+):
+    """QAT matmul: x (M, K) reals @ quantize-then-dequant(w (K, N) float
+    master weights) — the trainable twin of `vp_dequant_matmul`.
+
+    Forward quantizes the float master weight into ONE packed word plane
+    (`vp_quant(..., packed=True)`) and runs the packed serving kernel on
+    it, so training sees bit-identical numerics to what serving will run.
+    Backward is straight-through: dL/dx comes from the transposed
+    packed-word kernel over the SAME quantized words (never the float
+    plane), dL/dW = x^T g in f32 as if the quantizer were identity.
+    `models.layers._qdot_local` rides this when `QuantConfig.qat_mode ==
+    "packed"`.
+    """
+    contracts.require_quant_safe(fxp, vp, "vp_qat_matmul")
+    return _vp_qat_matmul_vjp(
+        x, w, fxp, vp, _static_dtype(w.dtype), _static_blocks(blocks),
+        interpret)
 
 
 def vp_matmul_batched(

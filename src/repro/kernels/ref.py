@@ -427,3 +427,44 @@ def block_vp_matmul_ref(
         sb = lut_b[b_i[t, :].astype(jnp.int32)]
         out = out + acc.astype(out_dtype) * sa[:, None] * sb[None, :]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Backward-pass oracles (custom-VJP grad matmuls over packed words)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("w_fmt", "out_dtype"))
+def vp_matmul_dx_ref(
+    g, w,
+    w_fmt: VPFormat,
+    out_dtype=jnp.float32,
+):
+    """Transposed serving-matmul oracle: g (M, N) @ dequant(w (K, N))^T.
+
+    This is EXACTLY what `jax.grad` of `vp_dequant_matmul_ref` computes
+    for the activation cotangent — XLA transposes `dot_general(x, deq,
+    contract (1, 0))` into `dot_general(g, deq, contract (1, 1))` — so
+    the custom-VJP grad check can pin the rule bit-for-bit against the
+    autodiff-through-dequant oracle on the ref backend."""
+    deq = dequant_words(w, w_fmt, out_dtype)
+    return jax.lax.dot_general(
+        g.astype(out_dtype), deq, (((1,), (1,)), ((), ())),
+        preferred_element_type=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("a_fmt", "out_dtype"))
+def vp_matmul_dw_ref(
+    a_w, g,
+    a_fmt: VPFormat,
+    out_dtype=jnp.float32,
+):
+    """Second-operand grad oracle: dequant(a_w (M, K))^T @ g (M, N).
+
+    The STE backward of the fused quantize-matmul w.r.t. its second
+    operand, consuming the PACKED quantized first operand saved as the
+    VJP residual — mirrors XLA's transpose of `dot_general(deq_a, b,
+    contract (1, 0))` w.r.t. b: `dot_general(deq_a, g, contract (0, 0))`."""
+    deq = dequant_words(a_w, a_fmt, out_dtype)
+    return jax.lax.dot_general(
+        deq, g.astype(out_dtype), (((0,), (0,)), ((), ())),
+        preferred_element_type=out_dtype)

@@ -1,0 +1,134 @@
+"""Pallas TPU kernels for the BACKWARD pass over packed VP words.
+
+The forward serving matmul (`vp_dequant_matmul`) contracts a real
+activation tile against a packed weight tile unpacked in VMEM; its VJP
+needs two grad matmuls, and both keep the paper's property that the f32
+weight plane never exists in HBM:
+
+  dL/dx = g (M, N) @ dequant(w (K, N))^T          `vp_matmul_dx`
+      The TRANSPOSED unpack-cascade matmul: the same packed weight tile
+      the forward read is unpacked in VMEM (shift + mask + O(1)
+      bit-assembled pow2 scale) and contracted over its OUTPUT dim —
+      `dot_general` with both contraction dims = 1, so no materialized
+      transpose either.  Grid (m, k, n) with n innermost accumulating
+      the N-partials in a VMEM f32 scratch.
+
+  dL/dB = dequant(a (M, K))^T @ g (M, N)          `vp_matmul_dw`
+      The grad w.r.t. the SECOND operand of the fused quantize-matmul
+      under the straight-through estimator: the packed QUANTIZED first
+      operand (saved as the VJP residual at `storage_bits` per element
+      instead of a float plane) is unpacked per tile and contracted over
+      the batch dim M.  Grid (k, n, m) with m innermost.
+
+Both reduce into f32 (`preferred_element_type`) — gradients are exactly
+the high-dynamic-range signals the VP format exists for, so the narrow
+words ride HBM and the accumulation stays wide on chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import VPFormat
+from . import substrate as sub
+
+BM, BK, BN = 256, 256, 256
+
+
+def _vp_matmul_dx_kernel(
+    g_ref, w_ref, o_ref, acc_ref, *, w_fmt: VPFormat, nn: int, dtype,
+):
+    ni = pl.program_id(2)
+    sub.accum_init(acc_ref, ni)
+    w = sub.dequant_packed(w_ref[...], w_fmt, dtype)          # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...].astype(dtype), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    sub.accum_flush(o_ref, acc_ref, ni, nn)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w_fmt", "interpret", "blocks", "out_dtype"),
+)
+def vp_matmul_dx_pallas(
+    g, w,
+    w_fmt: VPFormat,
+    interpret: bool = False,
+    blocks=(BM, BK, BN),
+    out_dtype=jnp.float32,
+):
+    """g (M, N) reals @ dequant(w (K, N) packed VP words)^T -> (M, K).
+
+    Shapes must be tile-multiples of `blocks` = (bm, bk, bn); `ops.py`
+    pads (packed word 0 decodes to real 0 and a zero g column contributes
+    nothing, so padding is exact)."""
+    (bm, bk, bn) = blocks
+    M, N = g.shape
+    K, _ = w.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    kernel = functools.partial(
+        _vp_matmul_dx_kernel, w_fmt=w_fmt, nn=nn, dtype=jnp.float32)
+    return sub.vp_pallas_call(
+        kernel,
+        grid=(nm, nk, nn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda mi, ki, ni: (mi, ni)),
+            pl.BlockSpec((bk, bn), lambda mi, ki, ni: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda mi, ki, ni: (mi, ki)),
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
+        scratch_shapes=[sub.vmem((bm, bk), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+    )(g, w)
+
+
+def _vp_matmul_dw_kernel(
+    a_ref, g_ref, o_ref, acc_ref, *, a_fmt: VPFormat, nm: int, dtype,
+):
+    mi = pl.program_id(2)
+    sub.accum_init(acc_ref, mi)
+    a = sub.dequant_packed(a_ref[...], a_fmt, dtype)          # (bm, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        a, g_ref[...].astype(dtype), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    sub.accum_flush(o_ref, acc_ref, mi, nm)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_fmt", "interpret", "blocks", "out_dtype"),
+)
+def vp_matmul_dw_pallas(
+    a, g,
+    a_fmt: VPFormat,
+    interpret: bool = False,
+    blocks=(BM, BK, BN),
+    out_dtype=jnp.float32,
+):
+    """dequant(a (M, K) packed VP words)^T @ g (M, N) reals -> (K, N)."""
+    (bm, bk, bn) = blocks
+    M, K = a.shape
+    _, N = g.shape
+    nm, nk, nn = M // bm, K // bk, N // bn
+    kernel = functools.partial(
+        _vp_matmul_dw_kernel, a_fmt=a_fmt, nm=nm, dtype=jnp.float32)
+    return sub.vp_pallas_call(
+        kernel,
+        grid=(nk, nn, nm),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ki, ni, mi: (mi, ki)),
+            pl.BlockSpec((bm, bn), lambda ki, ni, mi: (mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda ki, ni, mi: (ki, ni)),
+        out_shape=jax.ShapeDtypeStruct((K, N), out_dtype),
+        scratch_shapes=[sub.vmem((bk, bn), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+    )(a, g)

@@ -23,7 +23,7 @@ from repro.models import init_params
 from repro.optim import OptConfig, init_opt_state
 from repro.optim.optimizer import OptState
 from repro.train import make_train_step, CheckpointManager
-from repro.train.compression import init_compressor_state
+from repro.train.compression import CompressionConfig, init_compressor_state
 from repro.data import DataConfig, SyntheticLM
 
 
@@ -38,7 +38,22 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="error-feedback DP gradient compression "
+                         "(codec per --grad-codec)")
+    ap.add_argument("--grad-codec", default="int8",
+                    choices=["int8", "vp"],
+                    help="gradient codec for --compress-grads: int8 "
+                         "linear, or packed VP words + pow2 scale")
+    ap.add_argument("--compress-moments", action="store_true",
+                    help="store Adam mu/nu between steps as packed VP "
+                         "words (sqrt(nu) encoding)")
+    ap.add_argument("--qat", default="off",
+                    choices=["off", "fake", "packed"],
+                    help="quantization-aware fine-tune: every qdot "
+                         "quantizes through the serving VP format — "
+                         "'fake' = STE in the float graph, 'packed' = "
+                         "packed-word Pallas forward AND backward")
     ap.add_argument("--quant", default="none",
                     choices=["none", "fxp", "vp", "vp_block"])
     ap.add_argument("--ckpt-dir", default=None)
@@ -50,25 +65,37 @@ def main():
     cfg = (registry.get_smoke_config(args.arch, quant) if args.smoke
            else registry.get_config(args.arch, quant))
     opt_cfg = OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10),
-                        total_steps=args.steps)
+                        total_steps=args.steps,
+                        moment_codec="vp" if args.compress_moments
+                        else None)
+    qat = (QuantConfig(mode="vp", qat_mode=args.qat)
+           if args.qat != "off" else None)
+    cmp_cfg = (CompressionConfig(codec=args.grad_codec)
+               if args.compress_grads else False)
     data = SyntheticLM(DataConfig(
         vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
     step_fn = jax.jit(make_train_step(
         cfg, opt_cfg, microbatches=args.microbatches,
-        compress_grads=args.compress_grads))
+        compress_grads=cmp_cfg, qat=qat))
 
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     start = 0
     params = init_params(jax.random.PRNGKey(0), cfg)
-    opt_state = init_opt_state(params)
+    opt_state = init_opt_state(params, opt_cfg)
     cmp_state = (init_compressor_state(params)
                  if args.compress_grads else None)
     if mgr and mgr.latest_step() is not None:
         s = mgr.latest_step()
-        restored, manifest = mgr.restore(
-            s, {"params": params, "opt": opt_state._asdict()})
+        template = {"params": params, "opt": opt_state._asdict()}
+        if cmp_state is not None:
+            template["cmp"] = cmp_state
+        restored, manifest = mgr.restore(s, template)
         params = restored["params"]
         opt_state = OptState(**restored["opt"])
+        if cmp_state is not None:
+            # resume the error-feedback residual too — dropping it
+            # re-injects one step's quantization error unbalanced
+            cmp_state = restored.get("cmp", cmp_state)
         start = manifest["extra"]["data_index"]
         print(f"[resume] from step {s}, data index {start}")
 
@@ -94,12 +121,15 @@ def main():
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
         if mgr and (i + 1) % args.ckpt_every == 0:
-            mgr.save(i + 1, {"params": params, "opt": opt_state._asdict()},
-                     extra={"data_index": i + 1})
+            state = {"params": params, "opt": opt_state._asdict()}
+            if cmp_state is not None:
+                state["cmp"] = cmp_state
+            mgr.save(i + 1, state, extra={"data_index": i + 1})
     if mgr:
-        mgr.save(args.steps, {"params": params,
-                              "opt": opt_state._asdict()},
-                 extra={"data_index": args.steps})
+        state = {"params": params, "opt": opt_state._asdict()}
+        if cmp_state is not None:
+            state["cmp"] = cmp_state
+        mgr.save(args.steps, state, extra={"data_index": args.steps})
         mgr.wait()
     print("done.")
 

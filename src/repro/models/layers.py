@@ -178,6 +178,17 @@ def _qdot_local(x: jax.Array, wq: Any, q: QuantConfig,
         if train and q.mode in ("vp", "vp_block"):
             fxp, vp = canonical_formats(q)
             s = _pow2_scale(jax.lax.stop_gradient(w))
+            if q.qat_mode == "packed" and w.ndim == 2:
+                # Packed QAT: quantize the float master to packed words
+                # and run the packed serving kernel forward AND backward
+                # (custom VJP: dx by the transposed packed-word kernel,
+                # dW = x^T g under STE) — training numerics == serving.
+                # The pow2 scale commutes exactly with the contraction.
+                lead = x.shape[:-1]
+                x2 = x.reshape(-1, x.shape[-1]).astype(dtype)
+                out = kops.vp_qat_matmul(x2, w / s, fxp, vp)
+                out = out.astype(dtype) * s.astype(dtype)
+                return out.reshape(*lead, -1)
             w = vp_fake_quant_ste(w / s, fxp, vp) * s
         return jnp.dot(x, w.astype(dtype))
     if q.mode == "none":

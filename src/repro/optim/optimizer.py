@@ -3,14 +3,42 @@
 Optimizer state is a pytree shaped like the params (sharded identically by
 the launcher — ZeRO-1-style sharding of m/v over the model axis comes for
 free since they inherit the weight specs).
+
+VP-COMPRESSED MOMENTS (``OptConfig.moment_codec="vp"``): Adam's mu and
+especially nu = EMA(g^2) are the textbook high-dynamic-range tensors the
+paper's format exists for — nu spans the SQUARE of the gradient range, so
+a linear int8 grid either clips the head or flushes the tail.  With the
+codec on, each moment leaf is stored between steps as ACTUAL packed VP
+words + one f32 pow2 scale (`core.quantize.vp_pack_tensor` — the same
+`core.packing` word layout the serving kernels consume), cutting moment
+HBM from 8 bytes/param to 2*storage_bits/8 (2 bytes/param at the default
+M=6, E=2).  Each step decodes to f32, runs the exact Adam recurrence, and
+re-encodes.  No error-feedback residual is carried for moments (a f32
+residual would cost back the memory the codec saves); instead the EMA
+recurrence itself contracts the injected quantization error — an error e
+in a stored moment decays as b1^k (resp. b2^k) under subsequent updates,
+so the fixed point of training is unchanged (tests/test_train_step.py
+pins the loss trajectory against the f32-moment baseline).
+
+nu is stored as sqrt(nu): the second moment spans the SQUARE of the
+gradient dynamic range, so coordinates whose gradients sit ~2^-6 below
+the leaf max already fall 2^-12 below it in nu — under the quantizer
+they flush to zero while the matching mu survives, and
+mhat / (sqrt(0) + eps) turns a modest update into a 1e8x one (observed:
+divergence within 3 steps).  sqrt(nu) has exactly mu's dynamic range, so
+both moments flush at the same threshold and the preconditioned ratio
+stays bounded — the same trick 8-bit Adam variants use.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.formats import FXPFormat, VPFormat, default_vp_format
+from repro.core.quantize import vp_pack_tensor, vp_unpack_tensor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,12 +52,56 @@ class OptConfig:
     eps: float = 1e-8
     weight_decay: float = 0.01
     clip_norm: float = 1.0
+    # Moment storage codec: None = f32 planes (classic); "vp" = packed VP
+    # words + per-leaf pow2 scale between steps (see module docstring).
+    moment_codec: Optional[str] = None
+    moment_M: int = 6              # VP significand bits (incl. sign)
+    moment_E: int = 2              # VP exponent-index bits
+    moment_W: int = 12             # FXP proxy grid width
+
+    def __post_init__(self):
+        if self.moment_codec not in (None, "vp"):
+            raise ValueError(
+                f"unknown moment codec {self.moment_codec!r}; "
+                f"pick None or 'vp'")
+
+    def moment_formats(self) -> Tuple[FXPFormat, VPFormat]:
+        fxp = FXPFormat(self.moment_W, self.moment_W - 1)
+        return fxp, default_vp_format(fxp, self.moment_M, self.moment_E)
 
 
 class OptState(NamedTuple):
     step: jax.Array
     mu: Any
     nu: Any
+
+
+# A packed moment leaf is the dict {"w": packed words, "s": f32 scale}.
+# Moment pytrees mix these with plain f32 leaves only at the boundary
+# (init vs restored state), so every walker below flattens with this
+# `is_leaf` and the two layouts coexist.
+_PACKED_KEYS = frozenset(("w", "s"))
+
+
+def is_packed_moment(leaf) -> bool:
+    return isinstance(leaf, dict) and set(leaf.keys()) == _PACKED_KEYS
+
+
+def _moment_leaves(tree):
+    return jax.tree_util.tree_leaves(tree, is_leaf=is_packed_moment)
+
+
+def encode_moment(x, fxp: FXPFormat, vp: VPFormat):
+    """f32 moment plane -> {"w": packed words, "s": pow2 scale} leaf."""
+    w, s = vp_pack_tensor(x, fxp, vp)
+    return {"w": w, "s": s}
+
+
+def decode_moment(leaf, vp: VPFormat):
+    """Packed-moment leaf (or a plain f32 plane) -> f32 plane."""
+    if is_packed_moment(leaf):
+        return vp_unpack_tensor(leaf["w"], leaf["s"], vp, jnp.float32)
+    return leaf.astype(jnp.float32)
 
 
 def schedule(cfg: OptConfig, step):
@@ -42,7 +114,18 @@ def schedule(cfg: OptConfig, step):
     return cfg.lr * warm * frac
 
 
-def init_opt_state(params) -> OptState:
+def init_opt_state(params, cfg: Optional[OptConfig] = None) -> OptState:
+    """Zero state.  With cfg.moment_codec="vp", moments start as packed
+    zero words (scale 1.0) so the state NEVER materializes f32 planes."""
+    if cfg is not None and cfg.moment_codec == "vp":
+        fxp, vp = cfg.moment_formats()
+
+        def zero_moment(p):
+            return encode_moment(jnp.zeros(p.shape, jnp.float32), fxp, vp)
+
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree_util.tree_map(zero_moment, params),
+                        nu=jax.tree_util.tree_map(zero_moment, params))
     zeros = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
@@ -56,15 +139,27 @@ def global_norm(tree):
 
 
 def apply_updates(params, grads, state: OptState, cfg: OptConfig):
-    """One AdamW step; returns (new_params, new_state, metrics)."""
+    """One AdamW step; returns (new_params, new_state, metrics).
+
+    The Adam recurrence always runs in f32; with moment_codec="vp" the
+    moments are decoded from packed words on entry and re-encoded on
+    exit, so only the BETWEEN-step storage is compressed.
+    """
     step = state.step + 1
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
     lr = schedule(cfg, step)
     bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
     bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    packed = cfg.moment_codec == "vp"
+    if packed:
+        m_fxp, m_vp = cfg.moment_formats()
 
     def upd(p, g, m, v):
+        if packed:
+            m = decode_moment(m, m_vp)
+            # nu rides storage as sqrt(nu) — see module docstring.
+            v = jnp.square(decode_moment(v, m_vp))
         g = g.astype(jnp.float32) * scale
         m = cfg.b1 * m + (1 - cfg.b1) * g
         v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
@@ -73,12 +168,18 @@ def apply_updates(params, grads, state: OptState, cfg: OptConfig):
         delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
         if p.ndim >= 2:  # decay matrices only
             delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if packed:
+            # Re-encode AFTER the param delta was computed from the f32
+            # moments — the delta sees exact Adam, storage sees VP words.
+            m = encode_moment(m, m_fxp, m_vp)
+            v = encode_moment(jnp.sqrt(v), m_fxp, m_vp)
+        return new_p, m, v
 
     flat_p, tdef = jax.tree_util.tree_flatten(params)
     flat_g = jax.tree_util.tree_leaves(grads)
-    flat_m = jax.tree_util.tree_leaves(state.mu)
-    flat_v = jax.tree_util.tree_leaves(state.nu)
+    flat_m = _moment_leaves(state.mu)
+    flat_v = _moment_leaves(state.nu)
     outs = [upd(p, g, m, v)
             for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
     new_p = tdef.unflatten([o[0] for o in outs])

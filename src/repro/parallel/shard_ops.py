@@ -23,6 +23,13 @@ cross-device reduction ever touches a float accumulation order):
           is packed words AND it hides behind compute; the full f32
           weight never exists on any device.
 
+The datapath is trainable under the same mesh: `sharded_matmul_dx`
+reduces dL/dx across the tensor axis (one psum, or a ring
+reduce-scatter of row chunks overlapped with the per-chunk packed-word
+backward kernels), `sharded_matmul_dw` computes each shard's weight
+gradient purely locally, and `dp_compress_reduce` runs the
+error-feedback gradient codec before the data-axis mean.
+
 `shard_param_specs` places a whole quantized param tree for the model-
 level wrappers: every quantized weight leaf shards its OUTPUT (last)
 dim over the tensor axis, stacked MoE expert leaves shard their expert
@@ -98,6 +105,112 @@ def sharded_dequant_matmul(x, w_packed, fmt, *, axis: str = "model",
             if step < tp - 1:
                 chunk = jax.lax.ppermute(chunk, axis, perm=perm)
     return y
+
+
+def sharded_matmul_dx(g, w_packed, fmt, *, axis: str = "model",
+                      mode: str = "psum", out_dtype=jnp.float32,
+                      gather: bool = True):
+    """Backward of the column-sharded forward: dL/dx from a REPLICATED
+    output cotangent g (M, N) and the LOCAL packed weight shard
+    w_packed (K, N/tp) -> dx (M, K).  Must run inside shard_map.
+
+    A shard owns N/tp output columns, so its contribution to dx is
+    g[:, own cols] @ dequant(w_loc)^T — the packed-word backward kernel
+    (`kernels.ops.vp_matmul_dx`); the f32 weight plane never exists on
+    any device, mirroring the forward modes.
+
+      psum  local partial dx, then one all-reduce of M*K floats.  The
+            simple baseline (the backward analogue of `gather`).
+      ring  reduce-scatter: dx is chunked along M; each step computes
+            the partial for ONE rotating chunk while the accumulating
+            buffer ppermutes around the mesh, so after tp steps device i
+            holds its fully-reduced (M/tp, K) chunk — tp-fold fewer
+            collective bytes, hidden behind the per-chunk kernels.
+            `gather=True` all-gathers the chunks back to a replicated
+            dx; False leaves dx row-sharded (ZeRO-style consumers).
+
+    psum and ring add the same tp partials in different orders, so the
+    modes agree to f32 reduction tolerance (each is deterministic on its
+    own) — unlike the forward modes, which are concatenation-exact.
+    """
+    if mode not in ("psum", "ring"):
+        raise ValueError(f"mode must be 'psum' or 'ring': {mode!r}")
+    tp = jax.lax.psum(1, axis)
+    idx = jax.lax.axis_index(axis)
+    n_loc = w_packed.shape[1]
+    g_loc = jax.lax.dynamic_slice_in_dim(g, idx * n_loc, n_loc, axis=1)
+    if mode == "psum":
+        with autotune.mesh_scope(f"{axis}{tp}.N"):
+            dx = kops.vp_matmul_dx(g_loc, w_packed, fmt,
+                                   out_dtype=out_dtype)
+        return jax.lax.psum(dx, axis)
+    m = g.shape[0]
+    if m % tp:
+        raise ShardSpecError(
+            f"ring dx reduce-scatter chunks the batch dim: M={m} is not "
+            f"divisible by tensor-parallel size {tp}")
+    m_loc = m // tp
+
+    def chunk_term(c):
+        g_c = jax.lax.dynamic_slice_in_dim(g_loc, c * m_loc, m_loc, axis=0)
+        return kops.vp_matmul_dx(g_c, w_packed, fmt, out_dtype=out_dtype)
+
+    # Invariant: after step s, device i's buf holds
+    # sum_{d=i..i+s} T_d(chunk (i+1+s) % tp), where T_d(c) is device d's
+    # partial for chunk c — so after tp-1 steps buf is chunk i, fully
+    # reduced.  Same rotation as the forward ring.
+    perm = [(i, (i - 1) % tp) for i in range(tp)]
+    with autotune.mesh_scope(f"{axis}{tp}.N"):
+        buf = chunk_term((idx + 1) % tp)
+        for s in range(1, tp):
+            buf = jax.lax.ppermute(buf, axis, perm=perm) \
+                + chunk_term((idx + 1 + s) % tp)
+    if gather:
+        return jax.lax.all_gather(buf, axis, axis=0, tiled=True)
+    return buf
+
+
+def sharded_matmul_dw(a_w, g, fmt, *, axis: str = "model",
+                      out_dtype=jnp.float32):
+    """dL/dW shard for the column-sharded weight: dequant(a_w)^T @
+    g[:, own cols] -> (K, N/tp).  Must run inside shard_map.
+
+    Entirely LOCAL — each device's weight shard is touched only by its
+    own output columns, so the weight gradient needs no tensor-axis
+    collective at all (the DP-axis reduction is `dp_compress_reduce`).
+    The packed residual a_w rides HBM at storage_bits per element.
+    """
+    tp = jax.lax.psum(1, axis)
+    idx = jax.lax.axis_index(axis)
+    n_loc = g.shape[1] // tp
+    g_loc = jax.lax.dynamic_slice_in_dim(g, idx * n_loc, n_loc, axis=1)
+    with autotune.mesh_scope(f"{axis}{tp}.N"):
+        return kops.vp_matmul_dw(a_w, g_loc, fmt, out_dtype=out_dtype)
+
+
+def dp_compress_reduce(grads, state, *, axis: str = "data", config=None):
+    """Error-feedback compressed data-parallel gradient mean.
+
+    Must run inside shard_map over `axis`.  Each DP rank quantizes its
+    LOCAL gradient tree (int8 or packed VP words per
+    `CompressionConfig.codec`) carrying the residual in `state`; what
+    crosses the wire is the reduction of the DEQUANTIZED planes —
+    modeling the reduce-scatter-of-words fleets run, with the residual
+    keeping SGD convergence (the compressor is a contraction).  Returns
+    (mean grads, new state); per-rank residuals stay rank-local.
+    """
+    # Imported here: train.compression is a training-side module and
+    # this one is imported by serving paths (no train deps at import).
+    from repro.train.compression import (CompressionConfig,
+                                         compress_decompress)
+
+    if config is None:
+        config = CompressionConfig()
+    dp = jax.lax.psum(1, axis)
+    deq, new_state = compress_decompress(grads, state, config)
+    reduced = jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis) / dp, deq)
+    return reduced, new_state
 
 
 def sharded_decode_attention(q, k_w, v_w, k_s, v_s, lengths, fmt, *,

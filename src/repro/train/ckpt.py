@@ -45,7 +45,14 @@ def _unflatten_like(template, flat, prefix=""):
     if isinstance(template, (list, tuple)):
         seq = [_unflatten_like(v, flat, f"{prefix}/{i}")
                for i, v in enumerate(template)]
-        return type(template)(seq) if isinstance(template, tuple) else seq
+        if isinstance(template, tuple):
+            # NamedTuples (OptState(step, mu, nu), ...) construct from
+            # POSITIONAL fields — type(template)(seq) handed the whole
+            # list to the first field and raised TypeError on the rest.
+            if hasattr(template, "_fields"):
+                return type(template)(*seq)
+            return type(template)(seq)
+        return seq
     if template is None:
         return None
     return flat[prefix]
@@ -58,6 +65,30 @@ class CheckpointManager:
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        self._sweep_stale_tmp()
+
+    def _sweep_stale_tmp(self):
+        """Remove temp artifacts orphaned by a crashed/killed save.
+
+        A save that dies between mkdir and os.replace leaves
+        `.tmp_step_<N>_<pid>` (and possibly `.LATEST.tmp`) behind forever
+        — nothing else ever touches them, and on restart-heavy fleets
+        they accumulate one dead weight-sized directory per crash.  A new
+        manager owns the directory (restarts reuse the path, the dead
+        writer's pid is gone), so anything matching the temp pattern at
+        construction time is garbage by definition.  Completed
+        checkpoints (`step_<N>` with manifest) are never touched.
+        """
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if name.startswith(".tmp_step_"):
+                shutil.rmtree(path, ignore_errors=True)
+            elif name == ".LATEST.tmp":
+                # the pointer temp is a FILE, not a directory
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Dict[str, Any],

@@ -1,18 +1,56 @@
-"""Error-feedback int8 gradient compression (DP-axis bandwidth saver).
+"""Error-feedback gradient compression (DP-axis bandwidth saver).
 
-Each gradient leaf is quantized to int8 with a per-leaf scale BEFORE the
+Each gradient leaf is quantized with a per-leaf scale BEFORE the
 data-parallel all-reduce; the quantization residual is carried in the
 compressor state and added back next step (error feedback), which keeps
-SGD convergence (the compressor is a contraction).  Interestingly this is
-the VP idea applied to gradients: high-dynamic-range values, short
-significand, scale recovered from side information.
+SGD convergence (the compressor is a contraction).
+
+Two codecs (`CompressionConfig.codec`):
+
+  * ``int8`` — the original linear quantizer: scale = amax/127, one int8
+    per element.  Uniform resolution across the leaf.
+  * ``vp`` — the paper's format applied to gradients, the high-dynamic-
+    range case it exists for: each leaf is packed into ACTUAL VP words
+    (`core.quantize.vp_pack_tensor` -> `core.packing` layout,
+    `storage_bits` bits/element) with a per-leaf pow2 scale.  Small
+    gradient entries keep `M` significant bits instead of vanishing under
+    one global step size; what crosses the DP wire is the packed word
+    plane + one f32 scale (`parallel.shard_ops.dp_compress_reduce`).
+
+Both codecs carry f32 error feedback, so the compressor state layout is
+codec-independent (and checkpoints interchangeably).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.formats import FXPFormat, VPFormat, default_vp_format
+from repro.core.quantize import vp_pack_tensor, vp_unpack_tensor
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Gradient codec selection.  M/E/W only apply to codec="vp"."""
+    codec: str = "int8"
+    M: int = 7                     # VP significand bits (incl. sign)
+    E: int = 2                     # VP exponent-index bits
+    W: int = 12                    # FXP proxy grid width
+
+    def __post_init__(self):
+        if self.codec not in ("int8", "vp"):
+            raise ValueError(
+                f"unknown gradient codec {self.codec!r}; "
+                f"pick 'int8' or 'vp'")
+
+    def formats(self) -> Tuple[FXPFormat, VPFormat]:
+        """The (FXP, VP) pair the vp codec quantizes through — same
+        construction as `models.layers.canonical_formats`."""
+        fxp = FXPFormat(self.W, self.W - 1)
+        return fxp, default_vp_format(fxp, self.M, self.E)
 
 
 def init_compressor_state(params):
@@ -20,7 +58,7 @@ def init_compressor_state(params):
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def _compress_leaf(g, err):
+def _compress_leaf_int8(g, err):
     g = g.astype(jnp.float32) + err
     scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
@@ -28,16 +66,52 @@ def _compress_leaf(g, err):
     return deq, g - deq
 
 
-def compress_decompress(grads, state) -> Tuple[Any, Any]:
+def _compress_leaf_vp(g, err, fxp: FXPFormat, vp: VPFormat):
+    g = g.astype(jnp.float32) + err
+    words, scale = vp_pack_tensor(g, fxp, vp)
+    deq = vp_unpack_tensor(words, scale, vp, jnp.float32)
+    return deq, g - deq
+
+
+def _check_structs(grads, state):
+    """Fail loudly on mismatched trees — a silent zip-truncate here pairs
+    gradients with the WRONG error leaves and corrupts feedback forever."""
+    gdef = jax.tree_util.tree_structure(grads)
+    sdef = jax.tree_util.tree_structure(state)
+    if gdef == sdef:
+        return
+    gpaths = [jax.tree_util.keystr(p) for p, _ in
+              jax.tree_util.tree_flatten_with_path(grads)[0]]
+    spaths = [jax.tree_util.keystr(p) for p, _ in
+              jax.tree_util.tree_flatten_with_path(state)[0]]
+    only_g = [p for p in gpaths if p not in set(spaths)]
+    only_s = [p for p in spaths if p not in set(gpaths)]
+    raise ValueError(
+        "compress_decompress: gradient tree and compressor state differ "
+        f"in structure. Leaves only in grads: {only_g or 'none'}; leaves "
+        f"only in state: {only_s or 'none'}. Rebuild the state with "
+        "init_compressor_state(params) after any parameter-tree change.")
+
+
+def compress_decompress(grads, state,
+                        config: CompressionConfig = CompressionConfig(),
+                        ) -> Tuple[Any, Any]:
     """Quantize-dequantize every leaf with error feedback.
 
-    Under pjit the int8 representation is what crosses the DP axis (XLA
-    reduces the dequantized values; on real fleets this pairs with
-    reduce-scatter in int8 — here we model the numerics exactly)."""
+    Under pjit the compressed representation (int8, or packed VP words +
+    scale) is what crosses the DP axis (XLA reduces the dequantized
+    values; on real fleets this pairs with reduce-scatter of the words —
+    `parallel.shard_ops.dp_compress_reduce` models exactly that)."""
     if state is None:
         state = init_compressor_state(grads)
+    _check_structs(grads, state)
     flat_g, tdef = jax.tree_util.tree_flatten(grads)
     flat_e = jax.tree_util.tree_leaves(state)
-    outs = [_compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    if config.codec == "vp":
+        fxp, vp = config.formats()
+        outs = [_compress_leaf_vp(g, e, fxp, vp)
+                for g, e in zip(flat_g, flat_e)]
+    else:
+        outs = [_compress_leaf_int8(g, e) for g, e in zip(flat_g, flat_e)]
     return (tdef.unflatten([o[0] for o in outs]),
             tdef.unflatten([o[1] for o in outs]))

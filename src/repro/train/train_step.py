@@ -9,20 +9,40 @@ compression plugs into the DP reduction.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, QuantConfig
 from repro.models import loss_fn, decode_step, prefill
 from repro.optim.optimizer import OptConfig, OptState, apply_updates
-from .compression import compress_decompress
+from .compression import CompressionConfig, compress_decompress
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
                     microbatches: int = 1,
-                    compress_grads: bool = False):
+                    compress_grads: bool = False,
+                    qat: Optional[QuantConfig] = None):
     """Returns train_step(params, opt_state, batch[, cmp_state]) ->
-    (params, opt_state, metrics[, cmp_state])."""
+    (params, opt_state, metrics[, cmp_state]).
+
+    `qat` threads a QuantConfig into the loss so float master weights are
+    fine-tuned INTO a VP format: every qdot sees `train=True` with that
+    quant config — `qat_mode="fake"` runs the legacy fake-quant STE in
+    the float graph, `qat_mode="packed"` quantizes to packed words and
+    runs the packed Pallas serving kernel with the packed-word custom-VJP
+    backward (`kernels.ops.vp_qat_matmul`), so the fine-tune optimizes
+    exactly the numerics serving will execute.
+    """
+    if qat is not None:
+        cfg = dataclasses.replace(cfg, quant=qat)
+    # `compress_grads` accepts a bare bool (legacy int8 codec) or a
+    # CompressionConfig picking the codec ("vp" = packed-word gradients).
+    cmp_cfg = (compress_grads
+               if isinstance(compress_grads, CompressionConfig)
+               else CompressionConfig())
 
     def grad_one(params, mb):
         (loss, metrics), grads = jax.value_and_grad(
@@ -34,6 +54,17 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
         if microbatches == 1:
             loss, metrics, grads = grad_one(params, batch)
         else:
+            # Shapes are static under trace, so this fails at jit/trace
+            # time with the actual numbers instead of an opaque reshape
+            # error from `split` mid-scan.
+            for path, leaf in jax.tree_util.tree_flatten_with_path(batch)[0]:
+                if leaf.shape[0] % microbatches:
+                    raise ValueError(
+                        f"batch leaf {jax.tree_util.keystr(path)} has "
+                        f"leading (global batch) dim {leaf.shape[0]}, not "
+                        f"divisible by microbatches={microbatches}; pick a "
+                        f"microbatch count that divides the batch")
+
             def split(x):
                 return x.reshape(microbatches, x.shape[0] // microbatches,
                                  *x.shape[1:])
@@ -44,17 +75,21 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
                 loss, metrics, grads = grad_one(params, mb)
                 acc = jax.tree_util.tree_map(
                     lambda a, g: a + g.astype(jnp.float32), acc, grads)
-                return acc, loss
+                return acc, (loss, metrics)
 
             zero = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            grads, losses = jax.lax.scan(body, zero, mbs)
+            grads, (losses, stacked) = jax.lax.scan(body, zero, mbs)
             grads = jax.tree_util.tree_map(
                 lambda g: g / microbatches, grads)
             loss = losses.mean()
-            metrics = {"ce": loss}
+            # Per-microbatch aux metrics (load_balance, router_z, ...)
+            # used to be discarded here; average them over the scan axis
+            # so the metric dict matches the microbatches=1 path.
+            metrics = jax.tree_util.tree_map(
+                lambda m: m.mean(axis=0), stacked)
         if compress_grads:
-            grads, cmp_state = compress_decompress(grads, cmp_state)
+            grads, cmp_state = compress_decompress(grads, cmp_state, cmp_cfg)
         params, opt_state, opt_metrics = apply_updates(
             params, grads, opt_state, opt_cfg)
         metrics = {**metrics, **opt_metrics, "loss": loss}

@@ -137,6 +137,110 @@ def test_flash_prefill_parity():
 
 
 # ---------------------------------------------------------------------------
+# Backward collectives (PR 9): dx psum/ring, local dw, DP grad codec
+# ---------------------------------------------------------------------------
+
+def _bwd_operands():
+    fxp, vp = canonical_formats(QuantConfig(mode="vp"))
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(2), (16, 128), jnp.float32)
+    return (vp, fxp, kops.vp_quant(x, fxp, vp, packed=True),
+            kops.vp_quant(w, fxp, vp, packed=True), g)
+
+
+@pytest.mark.skipif(not REF_BACKEND, reason="oracle parity is a ref check")
+@pytest.mark.parametrize("mode", ["psum", "ring"])
+@pytest.mark.parametrize("tp", [2, 8])
+def test_sharded_matmul_dx_parity(mode, tp):
+    """dx across psum/ring modes vs the single-device backward kernel.
+
+    Unlike the forward modes (concatenation-exact), dx REDUCES partial
+    products across shards, so the contract is allclose, not bit-equal:
+    psum/ring add the same tp partials in different orders."""
+    vp, _, _, w_pk, g = _bwd_operands()
+    dx_ref = np.asarray(kops.vp_matmul_dx(g, w_pk, vp))
+    fn = jax.jit(shard_map(
+        partial(shard_ops.sharded_matmul_dx, fmt=vp, mode=mode),
+        mesh=_mesh(model=tp) if tp == 8 else _mesh(4, 2),
+        in_specs=(P(), P(None, "model")), out_specs=P(),
+        check_rep=False))
+    np.testing.assert_allclose(np.asarray(fn(g, w_pk)), dx_ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(not REF_BACKEND, reason="oracle parity is a ref check")
+def test_sharded_matmul_dx_ring_scatter_output():
+    """gather=False leaves dx row-sharded; the reassembled shards must
+    equal the gathered result."""
+    vp, _, _, w_pk, g = _bwd_operands()
+    dx_ref = np.asarray(kops.vp_matmul_dx(g, w_pk, vp))
+    fn = jax.jit(shard_map(
+        partial(shard_ops.sharded_matmul_dx, fmt=vp, mode="ring",
+                gather=False),
+        mesh=_mesh(model=8), in_specs=(P(), P(None, "model")),
+        out_specs=P("model"), check_rep=False))
+    np.testing.assert_allclose(np.asarray(fn(g, w_pk)), dx_ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_matmul_dx_bad_mode():
+    _, vp = canonical_formats(QuantConfig(mode="vp"))
+    with pytest.raises(ValueError, match="mode"):
+        shard_ops.sharded_matmul_dx(
+            jnp.zeros((2, 8)), jnp.zeros((4, 8), jnp.int16), vp,
+            mode="gather")
+
+
+@pytest.mark.skipif(not REF_BACKEND, reason="bit parity is a ref contract")
+def test_sharded_matmul_dw_local_bit_exact():
+    """The weight-grad shard is computed purely locally (no collective),
+    so it is BIT-identical to the matching slice of the full dw."""
+    vp, _, x_pk, _, g = _bwd_operands()
+    dw_ref = np.asarray(kops.vp_matmul_dw(x_pk, g, vp))
+    fn = jax.jit(shard_map(
+        partial(shard_ops.sharded_matmul_dw, fmt=vp),
+        mesh=_mesh(model=8), in_specs=(P(), P()),
+        out_specs=P(None, "model"), check_rep=False))
+    assert np.array_equal(np.asarray(fn(x_pk, g)), dw_ref)
+
+
+@pytest.mark.skipif(not REF_BACKEND, reason="oracle parity is a ref check")
+@pytest.mark.parametrize("codec", ["int8", "vp"])
+def test_dp_compress_reduce_oracle(codec):
+    """Compressed DP reduction == per-rank local compress, then mean —
+    with per-rank residuals carried in the returned state."""
+    from repro.train.compression import (
+        CompressionConfig, compress_decompress, init_compressor_state,
+    )
+
+    dp = 8
+    cfg = CompressionConfig(codec=codec)
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(3),
+                                    (dp, 16, 16), jnp.float32)}
+    state = init_compressor_state(grads)
+    fn = jax.jit(shard_map(
+        partial(shard_ops.dp_compress_reduce, axis="data", config=cfg),
+        mesh=_mesh(8, 1),
+        in_specs=({"w": P("data")}, {"w": P("data")}),
+        out_specs=({"w": P()}, {"w": P("data")}), check_rep=False))
+    red, new_state = fn(grads, state)
+    deqs, errs = [], []
+    for i in range(dp):
+        d, e = compress_decompress({"w": grads["w"][i:i + 1]},
+                                   {"w": state["w"][i:i + 1]}, cfg)
+        deqs.append(np.asarray(d["w"]))
+        errs.append(np.asarray(e["w"]))
+    oracle = np.mean(np.concatenate(deqs, 0), axis=0)
+    np.testing.assert_allclose(np.asarray(red["w"][0]), oracle,
+                               rtol=1e-6, atol=1e-7)
+    # jit-vs-eager f32 rounding (~1e-7) on the residual subtraction
+    np.testing.assert_allclose(np.asarray(new_state["w"]),
+                               np.concatenate(errs, 0),
+                               rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Full-model parity: quant x KV-layout matrix, dense + MoE (EP)
 # ---------------------------------------------------------------------------
 
