@@ -66,3 +66,33 @@ def scatter_positions(pool, page_ids, offsets, values):
     (reps, N, *tail) -> pool'.
     """
     return pool.at[:, page_ids, offsets].set(values)
+
+
+def flip_bit(pool, page, offset, bit):
+    """XOR one bit of the first stored element at (`page`, `offset`).
+
+    The fault-injection primitive for the chaos harness: corrupts ONE
+    packed VP word (or one float cache element, via a same-width integer
+    bitcast) in place, exactly as an HBM upset would — no other word in
+    the pool changes, so the chaos suite can assert the corruption never
+    escapes the page's owning request.  Targets rep 0 and the first tail
+    element; `bit` is masked into the dtype's width.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    idx = (0, page, offset) + (0,) * (pool.ndim - 3)
+    word = pool[idx]
+    if jnp.issubdtype(pool.dtype, jnp.integer):
+        # XOR in int32 (a 1<<7 mask does not FIT int8) and wrap back.
+        nbits = jnp.iinfo(pool.dtype).bits
+        mask = jnp.int32(1 << (bit % nbits))
+        flipped = (word.astype(jnp.int32) ^ mask).astype(pool.dtype)
+    else:
+        itype = {2: jnp.uint16, 4: jnp.uint32,
+                 8: jnp.uint64}[pool.dtype.itemsize]
+        nbits = pool.dtype.itemsize * 8
+        raw = jax.lax.bitcast_convert_type(word, itype)
+        raw = raw ^ itype(1 << (bit % nbits))
+        flipped = jax.lax.bitcast_convert_type(raw, pool.dtype)
+    return pool.at[idx].set(flipped)

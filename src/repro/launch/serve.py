@@ -79,7 +79,7 @@ def _ragged_gens(gen: int, n: int):
 def _run_engine(args, params, cfg, prompt_key, report):
     """Serve --batch requests through the paged continuous-batching
     engine (deterministic virtual clock charged with measured compute)."""
-    from repro.serving import ServingEngine, VirtualClock
+    from repro.serving import SLO_CLASSES, ServingEngine, VirtualClock
 
     n_req = args.batch
     gens = _ragged_gens(args.gen, n_req) if args.ragged_gen \
@@ -96,18 +96,31 @@ def _run_engine(args, params, cfg, prompt_key, report):
         prefill_chunk=args.prefill_chunk, temperature=args.temperature,
         decode_lookahead=args.lookahead,
         clock=VirtualClock(), check_finite=args.smoke,
-        hbm_budget_bytes=args.hbm_budget or None)
+        hbm_budget_bytes=args.hbm_budget or None,
+        policy=args.policy, preempt=args.preempt,
+        max_queue=args.max_queue or None,
+        on_nonfinite=args.on_nonfinite, degrade=args.degrade)
+    slo = SLO_CLASSES[args.slo] if args.slo != "none" else None
     for i in range(n_req):
         prompt = jax.random.randint(
             jax.random.fold_in(prompt_key, i), (args.prompt_len,), 0,
             cfg.vocab)
-        engine.submit([int(t) for t in prompt], gens[i], arrivals[i])
+        engine.submit(
+            [int(t) for t in prompt], gens[i], arrivals[i],
+            deadline=(arrivals[i] + args.deadline) if args.deadline else None,
+            slo=slo)
     recs = engine.run()
-    total_tokens = sum(len(r["tokens"]) for r in recs)
-    makespan = max(r["finish_time"] for r in recs) \
-        - min(r["arrival_time"] for r in recs)
-    lats = [r["finish_time"] - r["arrival_time"] for r in recs]
+    done = [r for r in recs if r["outcome"] in ("ok", "retried", "degraded")]
+    total_tokens = sum(len(r["tokens"]) for r in done)
+    ends = [r["finish_time"] for r in done if r["finish_time"] is not None]
+    makespan = (max(ends) - min(r["arrival_time"] for r in recs)) \
+        if ends else 0.0
+    lats = [r["finish_time"] - r["arrival_time"] for r in done
+            if r["finish_time"] is not None]
     tok_s = total_tokens / max(makespan, 1e-9)
+    outcomes = {}
+    for r in recs:
+        outcomes[r["outcome"]] = outcomes.get(r["outcome"], 0) + 1
     report.update({
         "mode": "engine", "n_requests": n_req, "max_slots": max_slots,
         "page_size": ps, "capacity": capacity,
@@ -116,13 +129,18 @@ def _run_engine(args, params, cfg, prompt_key, report):
         "hbm_cache_bytes": engine.kv.hbm_bytes(),
         "total_tokens": total_tokens, "makespan_s": makespan,
         "tokens_per_s": tok_s,
-        "p50_latency_s": _percentile(lats, 50),
-        "p99_latency_s": _percentile(lats, 99),
+        "p50_latency_s": _percentile(lats, 50) if lats else None,
+        "p99_latency_s": _percentile(lats, 99) if lats else None,
+        "policy": args.policy, "outcomes": outcomes,
+        "slo_met": sum(1 for r in recs if r.get("slo_met")),
+        "stats": dict(engine.stats),
     })
     print(f"[engine] {n_req} requests x {max_slots} slots "
           f"(pages of {ps}): {total_tokens} tokens in {makespan:.2f}s "
-          f"({tok_s:.1f} tok/s, p50 {report['p50_latency_s']:.2f}s, "
-          f"p99 {report['p99_latency_s']:.2f}s)")
+          f"({tok_s:.1f} tok/s, p50 {report['p50_latency_s']}s, "
+          f"p99 {report['p99_latency_s']}s)")
+    if set(outcomes) - {"ok"}:
+        print(f"[engine] outcomes: {outcomes}")
     print("[sample tokens]", [r["tokens"][:8] for r in recs[:4]])
 
 
@@ -256,6 +274,33 @@ def main():
     ap.add_argument("--hbm-budget", type=int, default=0,
                     help="engine mode: HBM byte budget sizing the page "
                          "pool (0 = fully committed)")
+    # Resilience / scheduling (engine mode)
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "edf"],
+                    help="engine admission: FIFO head-of-line or "
+                         "earliest-deadline-first")
+    ap.add_argument("--preempt", action="store_true",
+                    help="EDF: allow preemption-by-eviction of later-"
+                         "deadline running requests (re-admission "
+                         "re-prefills, tokens are preserved)")
+    ap.add_argument("--slo", default="none",
+                    choices=["none", "interactive", "standard", "batch"],
+                    help="attach this SLO class to every request "
+                         "(derives per-request deadlines)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request completion deadline, seconds after "
+                         "arrival (0 = none); expiry cancels with full "
+                         "page reclamation")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded submit queue: arrivals beyond this "
+                         "many waiting requests are shed (0 = unbounded)")
+    ap.add_argument("--on-nonfinite", default="raise",
+                    choices=["raise", "quarantine"],
+                    help="smoke finite-check action: hard stop (default "
+                         "for the CLI) or per-request quarantine")
+    ap.add_argument("--degrade", action="store_true",
+                    help="re-run repeatedly-quarantined requests on the "
+                         "static golden-baseline path instead of "
+                         "dropping them")
     args = ap.parse_args()
 
     quant = QuantConfig(mode=args.quant, M=args.M, E=args.E,

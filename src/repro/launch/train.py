@@ -6,8 +6,19 @@
 On CPU this trains the reduced (smoke) configs; on a TPU fleet the same
 driver runs the full configs under the production mesh (--mesh prod).
 The loop is crash-contained: every step the data position advances
-deterministically; on restart the latest checkpoint + data index resume
-bit-exactly (tested in tests/test_substrate.py).
+deterministically; on restart the latest INTACT checkpoint + data index
+resume bit-exactly (`CheckpointManager.restore_latest` walks past any
+checkpoint that fails its manifest checksums).
+
+`--ft-sim` exercises the full fault-tolerance stack against a simulated
+host set: each step every live simulated host heartbeats the
+`FaultToleranceController` (a designated straggler reports 3x step
+durations), `--ft-fail-steps` crashes one host at the named steps
+(killing the loop with a RuntimeError), and `run_with_restarts`
+restarts the loop — which resumes from the latest intact checkpoint
+while the controller evicts the dead host and proposes a shrunken
+elastic mesh.  The same controller/restart machinery a real fleet runs,
+driven end-to-end on one process.
 """
 from __future__ import annotations
 
@@ -22,7 +33,8 @@ from repro.configs.base import QuantConfig
 from repro.models import init_params
 from repro.optim import OptConfig, init_opt_state
 from repro.optim.optimizer import OptState
-from repro.train import make_train_step, CheckpointManager
+from repro.train import make_train_step, CheckpointManager, \
+    FaultToleranceController, run_with_restarts
 from repro.train.compression import CompressionConfig, init_compressor_state
 from repro.data import DataConfig, SyntheticLM
 
@@ -59,6 +71,17 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ft-sim", action="store_true",
+                    help="drive the FT controller + restart wrapper "
+                         "with a simulated host set")
+    ap.add_argument("--ft-hosts", type=int, default=4,
+                    help="simulated host count for --ft-sim")
+    ap.add_argument("--ft-fail-steps", default="",
+                    help="comma-separated steps at which a simulated "
+                         "host crashes (kills the loop; restarted)")
+    ap.add_argument("--ft-straggler", type=int, default=-1,
+                    help="simulated host id reporting 3x step durations")
+    ap.add_argument("--ft-max-restarts", type=int, default=3)
     args = ap.parse_args()
 
     quant = QuantConfig(mode=args.quant)
@@ -78,27 +101,6 @@ def main():
         cfg, opt_cfg, microbatches=args.microbatches,
         compress_grads=cmp_cfg, qat=qat))
 
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    start = 0
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    opt_state = init_opt_state(params, opt_cfg)
-    cmp_state = (init_compressor_state(params)
-                 if args.compress_grads else None)
-    if mgr and mgr.latest_step() is not None:
-        s = mgr.latest_step()
-        template = {"params": params, "opt": opt_state._asdict()}
-        if cmp_state is not None:
-            template["cmp"] = cmp_state
-        restored, manifest = mgr.restore(s, template)
-        params = restored["params"]
-        opt_state = OptState(**restored["opt"])
-        if cmp_state is not None:
-            # resume the error-feedback residual too — dropping it
-            # re-injects one step's quantization error unbalanced
-            cmp_state = restored.get("cmp", cmp_state)
-        start = manifest["extra"]["data_index"]
-        print(f"[resume] from step {s}, data index {start}")
-
     extra_batch = {}
     if cfg.family == "encdec":
         extra_batch["frames"] = jnp.zeros(
@@ -107,31 +109,113 @@ def main():
         extra_batch["patches"] = jnp.zeros(
             (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
 
-    t0 = time.time()
-    for i in range(start, args.steps):
-        batch = {**data.batch_at(i), **extra_batch}
-        if args.compress_grads:
-            params, opt_state, metrics, cmp_state = step_fn(
-                params, opt_state, batch, cmp_state)
-        else:
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            dt = time.time() - t0
-            print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
-        if mgr and (i + 1) % args.ckpt_every == 0:
+    # The checkpoint manager also lives OUTSIDE the restartable loop: an
+    # in-process restart (unlike a real crash) leaves the previous
+    # attempt's async writer thread alive, and a fresh manager would
+    # sweep its half-written tmp dir out from under it — losing the very
+    # checkpoint the restart needs.  One manager means `restore_latest`
+    # joins the in-flight save before reading.
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    # FT simulation state lives OUTSIDE the restartable loop: the
+    # controller's view of the fleet (and which hosts already died)
+    # must survive a crash-restart, exactly as it does on a real fleet
+    # where the controller is a separate service.
+    ft = None
+    sim = None
+    if args.ft_sim:
+        ft = FaultToleranceController(args.ft_hosts)
+        sim = {
+            "dead": set(),
+            "pending": sorted({int(s) for s in
+                               args.ft_fail_steps.split(",") if s.strip()}),
+            "healthy": ft.healthy(),
+            "now": 0.0,
+        }
+        if args.ckpt_dir is None:
+            print("[ft] warning: --ft-sim without --ckpt-dir restarts "
+                  "from step 0 every crash")
+
+    def _ft_step(i: int) -> None:
+        """One simulated fleet round: heartbeats, aging, crash injection."""
+        sim["now"] += 1.0
+        for h in range(args.ft_hosts):
+            if h in sim["dead"]:
+                continue
+            dur = 0.3 if h == args.ft_straggler else 0.1
+            ft.heartbeat(h, dur, now=sim["now"])
+        ft.tick()
+        if ft.topology_changed(sim["healthy"]):
+            sim["healthy"] = ft.healthy()
+            mesh = ft.propose_mesh(chips_per_host=1, model_axis=1)
+            print(f"[ft] topology changed: healthy={sim['healthy']} "
+                  f"-> elastic mesh {mesh} (generation {ft.generation})")
+        if sim["pending"] and i >= sim["pending"][0]:
+            sim["pending"].pop(0)
+            live = [h for h in range(args.ft_hosts) if h not in sim["dead"]]
+            victim = live[-1] if live else 0
+            sim["dead"].add(victim)
+            raise RuntimeError(
+                f"simulated failure of host{victim} at step {i}")
+
+    def train_loop(attempt: int = 0):
+        if attempt:
+            print(f"[restart] attempt {attempt}")
+        start = 0
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = init_opt_state(params, opt_cfg)
+        cmp_state = (init_compressor_state(params)
+                     if args.compress_grads else None)
+        if mgr:
+            template = {"params": params, "opt": opt_state._asdict()}
+            if cmp_state is not None:
+                template["cmp"] = cmp_state
+            res = mgr.restore_latest(template)
+            if res is not None:
+                restored, manifest, s = res
+                params = restored["params"]
+                opt_state = OptState(**restored["opt"])
+                if cmp_state is not None:
+                    # resume the error-feedback residual too — dropping
+                    # it re-injects one step's quantization error
+                    # unbalanced
+                    cmp_state = restored.get("cmp", cmp_state)
+                start = manifest["extra"]["data_index"]
+                print(f"[resume] from step {s}, data index {start}")
+
+        t0 = time.time()
+        for i in range(start, args.steps):
+            batch = {**data.batch_at(i), **extra_batch}
+            if args.compress_grads:
+                params, opt_state, metrics, cmp_state = step_fn(
+                    params, opt_state, batch, cmp_state)
+            else:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+            if ft is not None:
+                _ft_step(i)
+            if mgr and (i + 1) % args.ckpt_every == 0:
+                state = {"params": params, "opt": opt_state._asdict()}
+                if cmp_state is not None:
+                    state["cmp"] = cmp_state
+                mgr.save(i + 1, state, extra={"data_index": i + 1})
+        if mgr:
             state = {"params": params, "opt": opt_state._asdict()}
             if cmp_state is not None:
                 state["cmp"] = cmp_state
-            mgr.save(i + 1, state, extra={"data_index": i + 1})
-    if mgr:
-        state = {"params": params, "opt": opt_state._asdict()}
-        if cmp_state is not None:
-            state["cmp"] = cmp_state
-        mgr.save(args.steps, state, extra={"data_index": args.steps})
-        mgr.wait()
-    print("done.")
+            mgr.save(args.steps, state, extra={"data_index": args.steps})
+            mgr.wait()
+        print("done.")
+
+    if args.ft_sim:
+        run_with_restarts(train_loop, max_restarts=args.ft_max_restarts)
+    else:
+        train_loop()
 
 
 if __name__ == "__main__":

@@ -1,12 +1,19 @@
-"""Continuous-batching VP serving: paged cache, scheduler, runner, engine."""
+"""Continuous-batching VP serving: paged cache, scheduler, runner,
+engine, plus the PR-10 resilience layer (fault injection, SLO classes,
+graceful degradation)."""
 from .page_cache import PagedKVCache, SubSpec, plan_cache, page_group_bytes
-from .scheduler import Request, RunningRequest, Scheduler, VirtualClock, \
-    WallClock
-from .runner import ModelRunner, supports_chunked
+from .scheduler import Request, RunningRequest, Scheduler, SLOClass, \
+    SLO_CLASSES, VirtualClock, WallClock
+from .runner import ModelRunner, oracle_generate, supports_chunked
 from .engine import ServingEngine
+from .faults import FaultPlan, KVBitFlip, LogitPoison, PagePressure, \
+    SlowStep, TransientComputeError, TransientFault
 
 __all__ = [
     "PagedKVCache", "SubSpec", "plan_cache", "page_group_bytes",
-    "Request", "RunningRequest", "Scheduler", "VirtualClock", "WallClock",
-    "ModelRunner", "supports_chunked", "ServingEngine",
+    "Request", "RunningRequest", "Scheduler", "SLOClass", "SLO_CLASSES",
+    "VirtualClock", "WallClock",
+    "ModelRunner", "oracle_generate", "supports_chunked", "ServingEngine",
+    "FaultPlan", "KVBitFlip", "LogitPoison", "PagePressure", "SlowStep",
+    "TransientComputeError", "TransientFault",
 ]

@@ -2,7 +2,8 @@
 
 One engine iteration interleaves BOTH kinds of work:
 
-    ingest arrivals -> FIFO admission (slot + full page budget reserved)
+    fault hooks + deadline expiry -> admission (FIFO or EDF, optional
+                        preemption-by-eviction) -> queue backpressure
     one PREFILL unit  — the oldest admitted request's whole prompt, or
                         its next chunk when `prefill_chunk` is set
     one DECODE step   — every request with a committed prompt, batched
@@ -21,9 +22,39 @@ free-list question), and at construction the engine consults the PR-6
 `analysis.vmem` model to verify the packed decode-attention working set
 at full capacity fits on-chip — a config that could never lower fails
 fast here, not minutes into a traffic run.
+
+RESILIENCE (PR 10).  The paper's premise is operating near the edge of
+a format's dynamic range, so overflow/NaN escapes from the packed path
+are an expected operating condition to contain, not a fatal invariant
+violation:
+
+  * per-slot finite check — a non-finite logit quarantines ONLY the
+    offending request (`on_nonfinite="quarantine"`); surviving slots
+    continue bit-identically (the poisoned slot only ever wrote its own
+    reserved pages).  `"raise"` keeps the legacy all-or-nothing
+    `FloatingPointError` for smoke drivers that want a hard stop.
+  * retry with backoff — transient dispatch failures (`FaultPlan`
+    injection or real enqueue hiccups surfaced as
+    `TransientComputeError`) charge an exponential backoff to the clock
+    and retry; a request that keeps failing is quarantined.
+  * graceful degradation — a repeatedly-quarantined request re-runs on
+    the static golden-baseline path (`runner.oracle_generate`, dense
+    cache, optionally separately-quantized `degrade_params`) and is
+    flagged `degraded` instead of dropped.
+  * bounded submit queue — arrivals that find `max_queue` requests
+    already waiting are shed (`shed` outcome) instead of growing the
+    queue without bound under HBM pressure.
+  * deadlines/SLOs — see `scheduler`; expiry cancels with full page
+    reclamation (`timeout` outcome).
+
+Per-request outcomes land on the `run()` records
+(`ok|retried|quarantined|degraded|timeout|shed`) and aggregate counters
+on `engine.stats`; the chaos suite (tests/test_chaos.py) drives every
+fault class against these contracts.
 """
 from __future__ import annotations
 
+import collections
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -34,9 +65,11 @@ import numpy as np
 from repro.analysis.vmem import vmem_feasible
 from repro.configs.base import ModelConfig
 from repro.models.attention import kv_cache_formats
-from .page_cache import PagedKVCache
-from .runner import ModelRunner, supports_chunked
-from .scheduler import Request, RunningRequest, Scheduler, WallClock
+from .faults import FaultPlan, TransientComputeError
+from .page_cache import PAGED, PagedKVCache, buf_key
+from .runner import ModelRunner, oracle_generate, supports_chunked
+from .scheduler import Request, RunningRequest, Scheduler, SLOClass, \
+    WallClock
 
 
 class ServingEngine:
@@ -48,6 +81,11 @@ class ServingEngine:
     and the budgets.  `temperature=0` decodes greedily (the parity
     mode); `prefill_chunk` enables chunked prefill for full-causal
     models.
+
+    Resilience knobs (all default OFF / legacy-equivalent):
+      policy="fifo"|"edf", preempt, max_queue, check_finite +
+      on_nonfinite ("quarantine"|"raise"), max_retries/retry_backoff_s,
+      degrade/degrade_after/degrade_params, faults (a `FaultPlan`).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int,
@@ -58,9 +96,20 @@ class ServingEngine:
                  clock=None, check_finite: bool = False,
                  n_pages: Optional[int] = None,
                  hbm_budget_bytes: Optional[int] = None,
-                 mesh=None):
+                 mesh=None,
+                 policy: str = "fifo", preempt: bool = False,
+                 max_queue: Optional[int] = None,
+                 on_nonfinite: str = "quarantine",
+                 max_retries: int = 2, retry_backoff_s: float = 0.005,
+                 degrade: bool = False, degrade_after: int = 2,
+                 degrade_params=None,
+                 faults: Optional[FaultPlan] = None):
         if decode_lookahead < 1:
             raise ValueError("decode_lookahead must be >= 1")
+        if on_nonfinite not in ("quarantine", "raise"):
+            raise ValueError(
+                f"on_nonfinite must be 'quarantine' or 'raise', "
+                f"got {on_nonfinite!r}")
         self.mesh = mesh
         if mesh is not None:
             # Shard the weights over the mesh up front (packed words
@@ -84,9 +133,20 @@ class ServingEngine:
         self.decode_lookahead = int(decode_lookahead)
         self.runner = ModelRunner(cfg, self.kv, temperature=temperature,
                                   mesh=mesh)
-        self.scheduler = Scheduler(self.kv)
+        self.scheduler = Scheduler(self.kv, policy=policy, preempt=preempt)
         self.clock = clock if clock is not None else WallClock()
         self.check_finite = bool(check_finite)
+        self.on_nonfinite = on_nonfinite
+        self.max_queue = max_queue
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degrade = bool(degrade)
+        self.degrade_after = int(degrade_after)
+        self.degrade_params = degrade_params
+        self.faults = faults
+        self.stats = collections.Counter()
+        self._quarantine_counts: Dict[int, int] = {}
+        self._decode_fail_streak = 0
         self._key = jax.random.PRNGKey(seed)
         self._step = 0
         self.finished: List[RunningRequest] = []
@@ -121,8 +181,12 @@ class ServingEngine:
     # -- request API --------------------------------------------------------
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               arrival_time: float = 0.0) -> Request:
-        return self.scheduler.submit(prompt, max_new_tokens, arrival_time)
+               arrival_time: float = 0.0,
+               deadline: Optional[float] = None,
+               slo: Optional[SLOClass] = None) -> Request:
+        self.stats["submitted"] += 1
+        return self.scheduler.submit(prompt, max_new_tokens, arrival_time,
+                                     deadline=deadline, slo=slo)
 
     # -- internals ----------------------------------------------------------
 
@@ -145,35 +209,185 @@ class ServingEngine:
             self.clock.tick(time.perf_counter() - t0)
         return out
 
-    def _require_finite(self, logits, what: str) -> None:
+    def _charge(self, seconds: float) -> None:
+        """Charge non-compute time (backoff, stalls) to the clock."""
+        if hasattr(self.clock, "tick"):
+            self.clock.tick(seconds)
+        else:
+            self.clock.wait_until(self.clock.now() + seconds)
+
+    # -- fault containment --------------------------------------------------
+
+    def _screen(self, phase: str, run: RunningRequest, logits) -> bool:
+        """Per-slot health screen on one request's host logits.
+
+        Applies any scheduled fault-plan poison (host-side only — the
+        device computation and every co-resident slot are untouched),
+        then the finite check.  Returns True if the request is healthy;
+        False means the caller must quarantine it.  `"raise"` mode keeps
+        the legacy all-or-nothing FloatingPointError.
+        """
+        arr = None
+        if self.faults is not None:
+            arr = np.asarray(logits)
+            poisoned = self.faults.poison(phase, run.req.rid,
+                                          len(run.tokens), arr)
+            if poisoned is not None:
+                arr = poisoned
+                self.stats["fault_logit_poisons"] += 1
         if not self.check_finite:
-            return
-        if not bool(np.isfinite(np.asarray(logits)).all()):
+            return True
+        if arr is None:
+            arr = np.asarray(logits)
+        if bool(np.isfinite(arr).all()):
+            return True
+        if self.on_nonfinite == "raise":
             raise FloatingPointError(
-                f"non-finite logits in {what} (quantization overflow or "
-                f"bad cache read)")
+                f"non-finite logits in {phase} rid={run.req.rid} "
+                f"(quantization overflow or bad cache read)")
+        return False
+
+    def _quarantine(self, run: RunningRequest, where: str) -> None:
+        """Contain one poisoned request: cancel it (full page
+        reclamation, co-resident slots untouched), then requeue for a
+        fresh attempt or degrade to the golden-baseline path."""
+        rid = run.req.rid
+        count = self._quarantine_counts.get(rid, 0) + 1
+        self._quarantine_counts[rid] = count
+        run.quarantines = count
+        self.stats["quarantine_events"] += 1
+        self.scheduler.cancel(run)
+        if self.degrade and count >= self.degrade_after:
+            self._degrade(run)
+        elif self.degrade:
+            # fresh retry on the fast path (a transient overflow may not
+            # recur); the poisoned transcript is not trusted or resumed
+            run.tokens = []
+            self.scheduler.requeue(run.req)
+            self.stats["quarantine_requeues"] += 1
+        else:
+            run.outcome = "quarantined"
+            run.tokens = []
+            run.finish_time = self.clock.now()
+            self.finished.append(run)
+            self.stats["quarantined"] += 1
+
+    def _degrade(self, run: RunningRequest) -> None:
+        """Re-run a repeatedly-quarantined request on the static
+        golden-baseline path (dense cache, PR-4 oracle; greedy) and flag
+        it — the answer arrives late and slow, but it arrives."""
+        t0 = time.perf_counter()
+        params = self.degrade_params if self.degrade_params is not None \
+            else self.params
+        toks = oracle_generate(params, self.cfg, run.req.prompt,
+                               run.req.max_new_tokens, self.kv.capacity)
+        self._charge(time.perf_counter() - t0)
+        run.tokens = toks
+        run.outcome = "degraded"
+        run.finish_time = self.clock.now()
+        if run.first_token_time is None:
+            run.first_token_time = run.finish_time
+        self.finished.append(run)
+        self.stats["degraded"] += 1
+
+    def _transient_failure(self, run: RunningRequest, what: str) -> None:
+        """One failed dispatch: exponential backoff charged to the
+        clock; persistent failure quarantines the request."""
+        run.retries += 1
+        self.stats["transient_faults"] += 1
+        self._charge(self.retry_backoff_s * (2 ** (run.retries - 1)))
+        if run.retries > self.max_retries:
+            self._quarantine(run, f"{what} retries exhausted")
+
+    def _apply_kv_flips(self, run: RunningRequest) -> None:
+        """Apply scheduled bit flips inside this request's OWN pages
+        (silent HBM corruption; must never escape the page's owner)."""
+        from repro.kernels import paged
+        for spec in self.faults.kv_flips(run.req.rid):
+            keys = sorted(
+                buf_key(s, name) for s in self.kv.specs if s.kind == PAGED
+                for name, _, _ in s.bufs)
+            if not keys:
+                continue
+            key = spec.buf if spec.buf is not None else keys[0]
+            pages = self.kv.slot_pages.get(run.slot, [])
+            if not pages:
+                continue
+            page = pages[spec.page_index % len(pages)]
+            self.kv.pools[key] = paged.flip_bit(
+                self.kv.pools[key], page,
+                spec.offset % self.kv.page_size, spec.bit)
+            self.stats["fault_kv_bit_flips"] += 1
+
+    def _shed(self, now: float) -> None:
+        """Bounded-queue backpressure: arrivals that find `max_queue`
+        requests already waiting are rejected (newest first — they
+        found the queue full), not silently parked forever."""
+        if self.max_queue is None:
+            return
+        sched = self.scheduler
+        arrived = [r for r in sched.waiting if r.arrival_time <= now]
+        while len(arrived) > self.max_queue:
+            victim = max(arrived, key=lambda r: (r.arrival_time, r.rid))
+            arrived.remove(victim)
+            sched.waiting.remove(victim)
+            sched.progress.pop(victim.rid, None)
+            run = RunningRequest(req=victim, slot=-1, admitted_time=None)
+            run.outcome = "shed"
+            run.finish_time = now
+            self.finished.append(run)
+            self.stats["shed"] += 1
+
+    def _record_timeouts(self, expired, now: float) -> None:
+        for where, item in expired:
+            run = item if where == "running" else \
+                RunningRequest(req=item, slot=-1, admitted_time=None)
+            run.outcome = "timeout"
+            run.finish_time = now
+            self.finished.append(run)
+            self.stats["timeout"] += 1
+
+    # -- compute units ------------------------------------------------------
 
     def _prefill_unit(self, run: RunningRequest) -> None:
-        """Commit one prefill unit for `run`: the whole prompt, or the
-        next `prefill_chunk` positions.  The unit that commits the final
-        prompt position also yields the request's first generated token."""
-        prompt = run.req.prompt
-        if self.prefill_chunk is None:
-            tok, logits = self._timed(
-                self.runner.prefill_commit, self.params,
-                jnp.asarray(prompt, jnp.int32), run.slot, self._next_key())
-            run.prefill_pos = len(prompt)
-        else:
-            c = min(self.prefill_chunk, len(prompt) - run.prefill_pos)
-            chunk = prompt[run.prefill_pos:run.prefill_pos + c]
-            tok, logits = self._timed(
-                self.runner.chunk_prefill_commit, self.params,
-                jnp.asarray(chunk, jnp.int32), run.slot, self._next_key())
-            run.prefill_pos += c
-        self._require_finite(logits, f"prefill rid={run.req.rid}")
+        """Commit one prefill unit for `run`: the whole source (prompt
+        plus any preemption-resumed tokens), or the next `prefill_chunk`
+        positions.  The unit that commits the final source position also
+        yields the request's next generated token."""
+        if self.faults is not None and \
+                self.faults.take_transient("prefill", run.req.rid):
+            self._transient_failure(run, "prefill")
+            return
+        src = run.prefill_source
+        try:
+            if self.prefill_chunk is None:
+                tok, logits = self._timed(
+                    self.runner.prefill_commit, self.params,
+                    jnp.asarray(src, jnp.int32), run.slot, self._next_key())
+                run.prefill_pos = len(src)
+            else:
+                c = min(self.prefill_chunk, len(src) - run.prefill_pos)
+                chunk = src[run.prefill_pos:run.prefill_pos + c]
+                tok, logits = self._timed(
+                    self.runner.chunk_prefill_commit, self.params,
+                    jnp.asarray(chunk, jnp.int32), run.slot,
+                    self._next_key())
+                run.prefill_pos += c
+        except TransientComputeError:
+            self._transient_failure(run, "prefill")
+            return
+        if self.faults is not None and run.prefill_done:
+            self._apply_kv_flips(run)
+        # "prefill"-phase poison fires only on the unit that completes
+        # the prompt; intermediate chunks still get the finite check.
+        phase = "prefill" if run.prefill_done else "prefill_chunk"
+        if not self._screen(phase, run, logits):
+            self._quarantine(run, "prefill")
+            return
         if run.prefill_done:
             run.tokens.append(int(tok[0, 0]))
-            run.first_token_time = self.clock.now()
+            if run.first_token_time is None:
+                run.first_token_time = self.clock.now()
 
     def _lookahead(self, runs: List[RunningRequest]) -> int:
         """Fused steps this batch can run: bounded by the configured
@@ -187,19 +401,50 @@ class ServingEngine:
             return 1
         headroom = min(
             self.kv.capacity
-            - (len(r.req.prompt) + len(r.tokens) - 1) for r in runs)
+            - (len(r.prefill_source) + len(r.tokens)
+               - len(r.resumed) - 1) for r in runs)
         return self.decode_lookahead \
             if headroom >= self.decode_lookahead else 1
 
     def _decode_once(self, runs: List[RunningRequest]) -> None:
+        if self.faults is not None and \
+                self.faults.take_transient("decode", None):
+            # whole-step dispatch failure: nothing committed, the same
+            # batch retries next iteration after a charged backoff
+            self.stats["transient_faults"] += 1
+            self._decode_fail_streak += 1
+            for r in runs:
+                r.retries += 1
+            self._charge(self.retry_backoff_s
+                         * (2 ** (self._decode_fail_streak - 1)))
+            if self._decode_fail_streak > self.max_retries:
+                raise RuntimeError(
+                    f"decode step failed {self._decode_fail_streak} "
+                    f"consecutive times; giving up")
+            return
         slot_tokens = {r.slot: r.tokens[-1] for r in runs}
-        out = self._timed(self.runner.decode_batch, self.params,
-                          slot_tokens, self._next_key(),
-                          self._lookahead(runs))
+        try:
+            out = self._timed(self.runner.decode_batch, self.params,
+                              slot_tokens, self._next_key(),
+                              self._lookahead(runs))
+        except TransientComputeError:
+            self.stats["transient_faults"] += 1
+            self._decode_fail_streak += 1
+            for r in runs:
+                r.retries += 1
+            self._charge(self.retry_backoff_s
+                         * (2 ** (self._decode_fail_streak - 1)))
+            return
+        self._decode_fail_streak = 0
         by_slot = {r.slot: r for r in runs}
         for slot, (toks, logits) in out.items():
-            self._require_finite(logits, f"decode slot={slot}")
             run = by_slot[slot]
+            if not self._screen("decode", run, logits):
+                # quarantine ONLY this slot: its garbage lived in its
+                # own reserved pages (freed by cancel); every other
+                # slot's logits came off the same jitted call untouched
+                self._quarantine(run, "decode")
+                continue
             run.tokens.extend(toks)
             # run-ahead may overshoot the budget; the overshoot was
             # decoded into the slot's own reserved pages (freed at
@@ -210,6 +455,8 @@ class ServingEngine:
         now = self.clock.now()
         for run in [r for r in self.scheduler.running.values() if r.done]:
             self.scheduler.finish(run, now)
+            run.outcome = "retried" if run.retries > 0 else "ok"
+            self.stats[run.outcome] += 1
             self.finished.append(run)
 
     # -- main loop ----------------------------------------------------------
@@ -217,7 +464,15 @@ class ServingEngine:
     def step(self) -> bool:
         """One engine iteration; returns False when fully idle."""
         sched = self.scheduler
-        sched.admit(self.clock.now())
+        if self.faults is not None:
+            self.faults.on_step(self)
+        now = self.clock.now()
+        self._record_timeouts(sched.expire(now), now)
+        sched.admit(now)
+        if sched.preempted_log:
+            self.stats["preemptions"] += len(sched.preempted_log)
+            sched.preempted_log.clear()
+        self._shed(now)
         did = False
         run = sched.next_prefill()
         if run is not None:
@@ -230,26 +485,72 @@ class ServingEngine:
         self._retire()
         if did:
             return True
+        if sched.idle:
+            return False
+        # Nothing computable now: advance the clock to the next event —
+        # an arrival, a deadline expiry, or a fault-plan state change
+        # (e.g. a page-pressure spike releasing the pages the waiting
+        # head needs).
+        now = self.clock.now()
+        events = []
         nxt = sched.next_arrival()
-        if nxt is None:
-            return not sched.idle
-        self.clock.wait_until(nxt)
-        return True
+        if nxt is not None and nxt > now:
+            events.append(nxt)
+        dl = sched.next_deadline()
+        if dl is not None and dl > now:
+            events.append(dl + 1e-9)   # expiry is strict `now > deadline`
+        if self.faults is not None:
+            t = self.faults.next_event(now)
+            if t is not None and t > now:
+                events.append(t)
+        if events:
+            self.clock.wait_until(min(events))
+            return True
+        raise RuntimeError(
+            "engine stalled: requests are waiting but cannot be admitted "
+            "and no future event (arrival, deadline, fault release) can "
+            "unblock them")
 
     def run(self) -> List[Dict]:
-        """Serve until every submitted request completes; returns
-        per-request records (tokens + timing) sorted by request id."""
+        """Serve until every submitted request reaches a terminal
+        outcome; returns per-request records (tokens + timing +
+        outcome) sorted by request id."""
         while self.step():
             pass
+        if self.faults is not None:
+            self.faults.release_all(self)
         recs = []
         for run in sorted(self.finished, key=lambda r: r.req.rid):
+            req = run.req
+            n = len(run.tokens)
+            ttft = None if run.first_token_time is None \
+                else run.first_token_time - req.arrival_time
+            tpot = None
+            if run.first_token_time is not None and n > 1 \
+                    and run.finish_time is not None:
+                tpot = (run.finish_time - run.first_token_time) / (n - 1)
+            deadline_met = run.outcome in ("ok", "retried") and (
+                req.deadline is None
+                or (run.finish_time is not None
+                    and run.finish_time <= req.deadline))
             recs.append({
-                "rid": run.req.rid,
-                "prompt_len": len(run.req.prompt),
+                "rid": req.rid,
+                "prompt_len": len(req.prompt),
                 "tokens": list(run.tokens),
-                "arrival_time": run.req.arrival_time,
+                "arrival_time": req.arrival_time,
                 "admitted_time": run.admitted_time,
                 "first_token_time": run.first_token_time,
                 "finish_time": run.finish_time,
+                "outcome": run.outcome or "ok",
+                "deadline": req.deadline,
+                "slo": req.slo.name if req.slo is not None else None,
+                "ttft_s": ttft,
+                "tpot_s": tpot,
+                "deadline_met": deadline_met,
+                "slo_met": (deadline_met and req.slo.met(ttft, tpot))
+                if req.slo is not None else deadline_met,
+                "retries": run.retries,
+                "preemptions": run.preemptions,
+                "quarantines": run.quarantines,
             })
         return recs

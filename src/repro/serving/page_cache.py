@@ -194,6 +194,7 @@ class PagedKVCache:
         self.free_pages: List[int] = list(range(self.n_pages - 1, 0, -1))
         self.slot_pages: Dict[int, List[int]] = {}
         self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+        self._reserved: set = set()   # withheld by reserve_pages
 
     # -- capacity queries ---------------------------------------------------
 
@@ -261,6 +262,61 @@ class PagedKVCache:
         self.free_slots.append(slot)
         self.block_table = self.block_table.at[slot].set(0)
         self.lengths = self.lengths.at[slot].set(0)
+
+    # -- external pressure (fault injection / co-tenant reservations) -------
+
+    def reserve_pages(self, n: int) -> List[int]:
+        """Withhold up to `n` free pages from the allocator (an HBM
+        pressure spike: admissions back up while the reservation holds).
+        Returns the withheld ids — the caller MUST hand them back to
+        `release_pages` unchanged; conservation is checked there."""
+        take = min(int(n), len(self.free_pages))
+        held = [self.free_pages.pop() for _ in range(take)]
+        self._reserved.update(held)
+        return held
+
+    def release_pages(self, pages: List[int]) -> None:
+        """Return pages withheld by `reserve_pages`."""
+        for p in pages:
+            if p not in self._reserved:
+                raise ValueError(f"page {p} was not reserved")
+            self._reserved.discard(p)
+        self.free_pages.extend(reversed(pages))
+
+    # -- invariants (chaos-suite assertions) --------------------------------
+
+    def check_conservation(self) -> None:
+        """Every page id 1..n_pages-1 is free, reserved, or owned by
+        exactly one slot — raises on any leak, double-free or aliasing.
+        Quarantine, preemption, timeout and shed paths all promise this.
+        """
+        free = list(self.free_pages)
+        if len(set(free)) != len(free):
+            raise AssertionError("duplicate ids on the free list")
+        owned: Dict[int, int] = {}
+        for slot, pages in self.slot_pages.items():
+            for p in pages:
+                if p in owned:
+                    raise AssertionError(
+                        f"page {p} owned by slots {owned[p]} and {slot}")
+                owned[p] = slot
+        seen = set(free) | set(owned) | set(self._reserved)
+        want = set(range(1, self.n_pages))
+        if seen != want:
+            leaked = sorted(want - seen)
+            extra = sorted(seen - want)
+            raise AssertionError(
+                f"free-list conservation violated: leaked={leaked} "
+                f"extra={extra}")
+        if 0 in seen:
+            raise AssertionError("dummy page 0 entered circulation")
+
+    def page0_fingerprint(self) -> Dict[str, bytes]:
+        """Host bytes of page 0 in every pool — nothing may ever READ
+        page 0, and outside masked dummy writes nothing meaningful may
+        depend on it; chaos tests snapshot it around faulted runs."""
+        return {k: np.asarray(pool[:, 0]).tobytes()
+                for k, pool in self.pools.items()}
 
     # -- debug/test helpers -------------------------------------------------
 

@@ -89,6 +89,51 @@ def build_view(specs: Sequence[SubSpec], n_groups: int, pools, dense,
     return caches
 
 
+# Compiled prefill/decode for the degradation oracle, keyed by config
+# IDENTITY (the cfg is stored to pin the id).  A fresh `jax.jit` closure
+# per call would recompile on EVERY degrade — seconds charged straight
+# to the engine clock, turning the escape hatch into a deadline killer.
+_ORACLE_FNS: Dict[int, tuple] = {}
+
+
+def _oracle_fns(cfg: ModelConfig):
+    hit = _ORACLE_FNS.get(id(cfg))
+    if hit is not None and hit[0] is cfg:
+        return hit[1], hit[2]
+    pre = jax.jit(lambda p, t, c: prefill(p, t, c, cfg))
+    dec = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    _ORACLE_FNS[id(cfg)] = (cfg, pre, dec)
+    return pre, dec
+
+
+def oracle_generate(params, cfg: ModelConfig, prompt: Sequence[int],
+                    max_new_tokens: int, capacity: int) -> List[int]:
+    """Static B=1 greedy generation on the golden-baseline path.
+
+    This is the engine's graceful-degradation fallback: a request that
+    is repeatedly quarantined on the paged packed path re-runs here —
+    whole-prompt `prefill` + per-token `decode_step` on a fresh DENSE
+    cache (`init_cache`), exactly the PR-4 oracle the parity suites pin
+    the kernels against.  No paged pools, no packed-KV gather, no shared
+    state with the engine's cache — an escape hatch that cannot be
+    poisoned by the paged path's failure.  `params` may be the serving
+    params or a separately quantized planes/float copy (the engine's
+    `degrade_params`).
+    """
+    from repro.models import init_cache as _init_cache
+
+    pre, dec = _oracle_fns(cfg)
+    caches = _init_cache(cfg, 1, capacity)
+    logits, caches = pre(
+        params, jnp.asarray([list(prompt)], jnp.int32), caches)
+    toks = [int(np.asarray(logits).reshape(1, -1).argmax(-1)[0])]
+    for _ in range(max_new_tokens - 1):
+        logits, caches = dec(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), caches)
+        toks.append(int(np.asarray(logits).reshape(1, -1).argmax(-1)[0]))
+    return toks
+
+
 def supports_chunked(specs: Sequence[SubSpec]) -> bool:
     """Chunked prefill needs offset-aware attention writes, which the
     chunk path implements for full-causal (non-windowed) layers only;

@@ -1,4 +1,4 @@
 from .train_step import make_train_step, make_serve_step, make_prefill_step
-from .ckpt import CheckpointManager
+from .ckpt import CheckpointCorruptError, CheckpointManager
 from .ft import FaultToleranceController, FTConfig, run_with_restarts
 from .compression import compress_decompress, init_compressor_state

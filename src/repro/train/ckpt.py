@@ -12,6 +12,7 @@ thread; `wait()` joins before the next save (single outstanding save).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -21,6 +22,19 @@ from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint on disk fails its manifest checksums (bit rot,
+    torn write on a non-atomic filesystem, operator error)."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree, prefix=""):
@@ -112,6 +126,11 @@ class CheckpointManager:
                 "extra": extra or {},
                 "n_arrays": len(host),
                 "bytes": int(sum(a.nbytes for a in host.values())),
+                # per-file integrity: restore verifies these before
+                # trusting the arrays (manifest.json itself is implicitly
+                # covered — a torn manifest fails json.load)
+                "files": {"arrays.npz":
+                          _sha256(os.path.join(tmp, "arrays.npz"))},
             }
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
@@ -163,10 +182,41 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, template, shardings=None):
+    def verify(self, step: int) -> None:
+        """Check a checkpoint's files against its manifest checksums.
+
+        Raises `CheckpointCorruptError` on any mismatch or missing file.
+        Pre-checksum manifests (no "files" key) verify trivially —
+        restores of old checkpoints keep working, they just get no
+        integrity guarantee.
+        """
+        path = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable manifest ({e})") from e
+        for name, want in manifest.get("files", {}).items():
+            fpath = os.path.join(path, name)
+            if not os.path.exists(fpath):
+                raise CheckpointCorruptError(
+                    f"step {step}: missing file {name}")
+            got = _sha256(fpath)
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"step {step}: checksum mismatch on {name} "
+                    f"(manifest {want[:12]}…, disk {got[:12]}…)")
+
+    def restore(self, step: int, template, shardings=None,
+                verify: bool = True):
         """Restore into the structure of `template`, placing shards onto
-        the current mesh via `shardings` (elastic re-mesh restore)."""
+        the current mesh via `shardings` (elastic re-mesh restore).
+        `verify` checks manifest checksums first and raises
+        `CheckpointCorruptError` instead of loading corrupt arrays."""
         self.wait()
+        if verify:
+            self.verify(step)
         path = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
@@ -177,3 +227,19 @@ class CheckpointManager:
             tree = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s), tree, shardings)
         return tree, manifest
+
+    def restore_latest(self, template, shardings=None):
+        """Restore the newest INTACT checkpoint, walking past corrupt
+        ones (newest -> oldest).  Returns (tree, manifest, step), or
+        None if no intact checkpoint exists.  This is the resume path:
+        one rotted checkpoint costs `ckpt_every` steps of recompute, not
+        the whole run."""
+        self.wait()
+        for step in reversed(self.all_steps()):
+            try:
+                tree, manifest = self.restore(step, template, shardings,
+                                              verify=True)
+                return tree, manifest, step
+            except CheckpointCorruptError:
+                continue
+        return None

@@ -1,0 +1,467 @@
+"""Chaos suite (PR 10): fault injection against the serving engine.
+
+The resilience contract under test, for every fault class in
+`repro.serving.faults` (on the jnp ref backend, deterministic virtual
+clock):
+
+  * the engine NEVER crashes — every submitted request reaches a
+    terminal outcome in {ok, retried, quarantined, degraded, timeout,
+    shed};
+  * UNAFFECTED requests emit tokens bit-identical to the fault-free
+    run (containment: a poisoned slot's garbage lives only in its own
+    reserved pages, and host-side poison never touches the device
+    computation);
+  * the page free-list is conserved (no leak, no double-free) and the
+    dummy page 0 is never handed out or corrupted by injection;
+  * deadlines/SLOs keep being enforced under injected slowdowns, with
+    full page reclamation on every timeout/cancel path.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.kernels import paged, substrate
+from repro.serving import (
+    FaultPlan, KVBitFlip, LogitPoison, PagePressure, ServingEngine,
+    SlowStep, TransientFault, VirtualClock,
+)
+
+REF_BACKEND = substrate.resolve_backend(None) == "ref"
+
+REQS = [([1, 2, 3, 4, 5], 4, 0.0),
+        (list(range(7)), 5, 0.0),
+        ([9, 8, 7], 3, 0.05)]
+CAP, PAGE, SLOTS = 24, 8, 2
+
+KV_LAYOUTS = ["float", "packed", "planes"]
+
+
+def _quant(kv: str) -> QuantConfig:
+    if kv == "float":
+        return QuantConfig(mode="vp")
+    return QuantConfig(mode="vp", quantize_kv_cache=True, kv_layout=kv)
+
+
+def _cfg(kv: str = "packed") -> ModelConfig:
+    return ModelConfig(name="tiny", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab=128, dtype="float32", quant=_quant(kv))
+
+
+def _params(cfg):
+    from repro.models import init_params, quantize_params
+    return quantize_params(init_params(jax.random.PRNGKey(0), cfg), cfg)
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("capacity", CAP)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("clock", VirtualClock())
+    return ServingEngine(params, cfg, **kw)
+
+
+def _submit_all(eng, reqs=REQS, **kw):
+    for prompt, gen, at in reqs:
+        eng.submit(prompt, gen, at, **kw)
+
+
+def _baseline_tokens(params, cfg, reqs=REQS):
+    """Fault-free engine run: the bit-exactness reference."""
+    eng = _engine(params, cfg)
+    _submit_all(eng, reqs)
+    return {r["rid"]: r["tokens"] for r in eng.run()}
+
+
+def _check_invariants(eng):
+    """Free-list conservation + page 0 still reserved, after any run."""
+    eng.kv.check_conservation()
+    assert not eng.kv.slot_pages          # everything reclaimed
+    assert len(eng.kv.free_pages) == eng.kv.n_pages - 1
+    assert 0 not in eng.kv.free_pages
+
+
+OUTCOMES = {"ok", "retried", "quarantined", "degraded", "timeout", "shed"}
+
+
+# ---------------------------------------------------------------------------
+# flip_bit primitive: exactly one bit of one word, never page 0
+
+
+@pytest.mark.parametrize("kv", ["packed", "float"])
+def test_flip_bit_touches_exactly_one_word(kv):
+    cfg = _cfg(kv)
+    eng = _engine(_params(cfg), cfg)
+    key = sorted(eng.kv.pools)[0]
+    pool = eng.kv.pools[key]
+    before = np.asarray(pool).copy()
+    after = np.asarray(paged.flip_bit(pool, page=3, offset=2, bit=4))
+    page0_before = before[:, 0]
+    page0_after = after[:, 0]
+    np.testing.assert_array_equal(page0_before, page0_after)
+    diff = (before != after) | (np.isnan(before) != np.isnan(after))
+    assert diff.sum() == 1
+    idx = tuple(int(i[0]) for i in np.nonzero(diff))
+    assert idx[1] == 3 and idx[2] == 2
+    # involution: flipping again restores the pool bit-exactly
+    twice = np.asarray(paged.flip_bit(jnp.asarray(after), 3, 2, 4))
+    assert before.tobytes() == twice.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# logit poisoning -> per-slot quarantine
+
+
+@pytest.mark.parametrize("value", [math.nan, math.inf])
+def test_logit_poison_quarantines_only_victim(value):
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    eng = _engine(params, cfg, check_finite=True,
+                  faults=FaultPlan([LogitPoison(rid=1, phase="decode",
+                                                value=value)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[1]["outcome"] == "quarantined"
+    assert recs[1]["tokens"] == []          # poisoned transcript dropped
+    for rid in (0, 2):                      # co-resident slots unharmed
+        assert recs[rid]["outcome"] == "ok"
+        if REF_BACKEND:
+            assert recs[rid]["tokens"] == base[rid]
+    assert eng.stats["quarantined"] == 1
+    assert eng.stats["fault_logit_poisons"] >= 1
+    _check_invariants(eng)
+
+
+def test_logit_poison_prefill_phase():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    eng = _engine(params, cfg, check_finite=True,
+                  faults=FaultPlan([LogitPoison(rid=0, phase="prefill")]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[0]["outcome"] == "quarantined"
+    assert recs[1]["outcome"] == recs[2]["outcome"] == "ok"
+    _check_invariants(eng)
+
+
+def test_on_nonfinite_raise_is_all_or_nothing():
+    """Legacy mode: the same poison hard-stops the whole engine."""
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    eng = _engine(params, cfg, check_finite=True, on_nonfinite="raise",
+                  faults=FaultPlan([LogitPoison(rid=1)]))
+    _submit_all(eng)
+    with pytest.raises(FloatingPointError):
+        eng.run()
+
+
+# ---------------------------------------------------------------------------
+# quarantine escalation: retry, then degrade to the golden baseline
+
+
+def test_quarantine_retry_then_ok():
+    """A once-poisoned request (times=1) is requeued, re-runs clean,
+    and finishes with bit-identical tokens."""
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    eng = _engine(params, cfg, check_finite=True, degrade=True,
+                  degrade_after=2,
+                  faults=FaultPlan([LogitPoison(rid=0, times=1)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    for rid in (0, 1, 2):
+        assert recs[rid]["outcome"] == "ok"
+        if REF_BACKEND:
+            assert recs[rid]["tokens"] == base[rid]
+    assert eng.stats["quarantine_requeues"] == 1
+    assert eng.stats["degraded"] == 0
+    _check_invariants(eng)
+
+
+def test_repeated_quarantine_degrades():
+    """A persistently-poisoned request lands on the static oracle path,
+    flagged degraded — and its oracle tokens match the fault-free run."""
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    eng = _engine(params, cfg, check_finite=True, degrade=True,
+                  degrade_after=2,
+                  faults=FaultPlan([LogitPoison(rid=0)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[0]["outcome"] == "degraded"
+    assert recs[1]["outcome"] == recs[2]["outcome"] == "ok"
+    if REF_BACKEND:
+        for rid in (0, 1, 2):   # the oracle path IS the parity baseline
+            assert recs[rid]["tokens"] == base[rid]
+    assert eng.stats["degraded"] == 1
+    assert eng.stats["quarantine_events"] == 2
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# KV bit flips: silent corruption must stay inside the victim's pages
+
+
+@pytest.mark.parametrize("kv", KV_LAYOUTS)
+def test_kv_bitflip_isolated_to_victim(kv):
+    cfg = _cfg(kv)
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    fp0 = None
+    eng = _engine(params, cfg, check_finite=True,
+                  faults=FaultPlan([KVBitFlip(rid=0, page_index=0,
+                                              offset=1, bit=3)]))
+    fp0 = eng.kv.page0_fingerprint()
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert eng.stats["fault_kv_bit_flips"] == 1
+    # VP dequant of ANY word is finite -> silent corruption: rid 0 may
+    # emit different tokens (or trip the finite check on a float cache),
+    # but it must reach a terminal outcome and len <= its budget...
+    assert recs[0]["outcome"] in OUTCOMES
+    assert len(recs[0]["tokens"]) <= REQS[0][1]
+    # ...while the OTHER requests never see the corruption:
+    for rid in (1, 2):
+        assert recs[rid]["outcome"] == "ok"
+        if REF_BACKEND:
+            assert recs[rid]["tokens"] == base[rid]
+    # the flip landed in rid 0's own pages, never the dummy page
+    assert eng.kv.page0_fingerprint() == fp0
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# page-pressure spikes: admission backs up, engine waits, then drains
+
+
+def test_page_pressure_delays_then_completes():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    eng = _engine(params, cfg, faults=FaultPlan(
+        [PagePressure(at=0.0, release=0.25, pages=10_000)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert eng.stats["fault_page_spikes"] == 1
+    for rid in (0, 1, 2):
+        assert recs[rid]["outcome"] == "ok"
+        # nothing could be admitted before the spike released
+        assert recs[rid]["admitted_time"] >= 0.25
+        if REF_BACKEND:
+            assert recs[rid]["tokens"] == base[rid]
+    _check_invariants(eng)
+
+
+def test_page_pressure_with_bounded_queue_sheds():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    eng = _engine(params, cfg, max_queue=1, faults=FaultPlan(
+        [PagePressure(at=0.0, release=0.25, pages=10_000)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    outcomes = sorted(r["outcome"] for r in recs.values())
+    assert outcomes.count("shed") == 1      # queue bound 1 + 1 admitted...
+    assert eng.stats["shed"] == 1
+    assert all(o in OUTCOMES for o in outcomes)
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# transient dispatch failures: retry with backoff
+
+
+def test_transient_decode_step_retries():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    eng = _engine(params, cfg, faults=FaultPlan(
+        [TransientFault(kind="decode", times=2)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert eng.stats["transient_faults"] == 2
+    for rid in (0, 1, 2):
+        assert recs[rid]["outcome"] in ("ok", "retried")
+        if REF_BACKEND:
+            assert recs[rid]["tokens"] == base[rid]
+    assert any(r["outcome"] == "retried" for r in recs.values())
+    _check_invariants(eng)
+
+
+def test_transient_prefill_exhaustion_quarantines():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    eng = _engine(params, cfg, max_retries=1, faults=FaultPlan(
+        [TransientFault(kind="prefill", rid=0, times=100)]))
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[0]["outcome"] == "quarantined"
+    for rid in (1, 2):
+        assert recs[rid]["outcome"] == "ok"
+        if REF_BACKEND:
+            assert recs[rid]["tokens"] == base[rid]
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# slow steps + deadlines/SLOs
+
+
+def test_slow_step_forces_timeout_under_slo():
+    from repro.serving import SLO_CLASSES
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    eng = _engine(params, cfg, faults=FaultPlan(
+        [SlowStep(at=0.0, extra_s=30.0)]))
+    _submit_all(eng, slo=SLO_CLASSES["interactive"])
+    recs = {r["rid"]: r for r in eng.run()}
+    assert eng.stats["fault_slow_steps"] == 1
+    # a 30 s stall blows every interactive deadline before admission
+    assert all(r["outcome"] == "timeout" for r in recs.values())
+    assert all(not r["slo_met"] for r in recs.values())
+    _check_invariants(eng)
+
+
+def test_deadline_timeout_running_and_waiting():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    eng = _engine(params, cfg, max_slots=1)
+    eng.submit(REQS[0][0], 64 // PAGE and 4, 0.0)           # no deadline
+    eng.submit(REQS[1][0], 5, 0.0, deadline=1e-9)           # expires waiting
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[0]["outcome"] == "ok"
+    assert recs[1]["outcome"] == "timeout"
+    assert recs[1]["tokens"] == []
+    assert recs[1]["deadline_met"] is False
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# EDF + preemption
+
+
+def test_edf_admits_tightest_deadline_first():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    # Compute time (incl. first-dispatch jit compile) is charged to the
+    # virtual clock, so both deadlines are generous; only their ORDER
+    # matters to EDF.
+    eng = _engine(params, cfg, max_slots=1, policy="edf")
+    eng.submit(REQS[0][0], 4, 0.0, deadline=1e9)
+    eng.submit(REQS[1][0], 5, 0.0, deadline=1e6)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[0]["outcome"] == recs[1]["outcome"] == "ok"
+    # rid 1's deadline is tighter: it must start (and finish) first
+    assert recs[1]["first_token_time"] < recs[0]["first_token_time"]
+
+
+def test_preemption_resume_is_bit_exact():
+    """A tight-deadline arrival evicts the running batch request; the
+    victim re-prefills prompt+generated on re-admission and completes
+    with tokens bit-identical to an uncontended run."""
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    solo = {}
+    for prompt, gen, _ in REQS[:2]:
+        eng = _engine(params, cfg, max_slots=1)
+        eng.submit(prompt, gen, 0.0)
+        solo[prompt[0]] = eng.run()[0]["tokens"]
+    eng = _engine(params, cfg, max_slots=1, policy="edf", preempt=True)
+    eng.submit(REQS[0][0], REQS[0][1], 0.0)                  # no deadline
+    eng.submit(REQS[1][0], REQS[1][1], 1e-4, deadline=100.0)  # preempts
+    recs = {r["rid"]: r for r in eng.run()}
+    assert recs[0]["outcome"] == recs[1]["outcome"] == "ok"
+    assert recs[0]["preemptions"] == 1
+    assert eng.stats["preemptions"] == 1
+    if REF_BACKEND:
+        assert recs[0]["tokens"] == solo[REQS[0][0][0]]
+        assert recs[1]["tokens"] == solo[REQS[1][0][0]]
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# shed backpressure without faults
+
+
+def test_bounded_queue_sheds_newest():
+    cfg = _cfg("packed")
+    params = _params(cfg)
+    eng = _engine(params, cfg, max_slots=1, max_queue=1)
+    for i in range(4):
+        eng.submit([1 + i, 2, 3], 3, 0.0)
+    recs = {r["rid"]: r for r in eng.run()}
+    outcomes = [recs[i]["outcome"] for i in range(4)]
+    assert outcomes.count("shed") == 2      # 1 running + 1 queued survive
+    assert outcomes[0] == "ok"              # head of line always serves
+    assert eng.stats["shed"] == 2
+    assert eng.stats["submitted"] == 4
+    _check_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# the combined chaos matrix
+
+
+@pytest.mark.parametrize("kv", KV_LAYOUTS)
+def test_chaos_matrix_combined(kv):
+    """Every fault class at once, per KV layout: no crash, terminal
+    outcomes for all, the untargeted request bit-identical, allocator
+    conserved, page 0 untouched, deadlines still enforced."""
+    cfg = _cfg(kv)
+    params = _params(cfg)
+    base = _baseline_tokens(params, cfg)
+    plan = FaultPlan([
+        LogitPoison(rid=1, phase="decode"),
+        KVBitFlip(rid=0, page_index=0, offset=2, bit=1),
+        PagePressure(at=0.0, release=0.1, pages=10_000),
+        TransientFault(kind="decode", times=1),
+        SlowStep(at=0.15, extra_s=0.05),
+    ])
+    eng = _engine(params, cfg, check_finite=True, degrade=True,
+                  degrade_after=2, faults=plan)
+    fp0 = eng.kv.page0_fingerprint()
+    _submit_all(eng)
+    recs = {r["rid"]: r for r in eng.run()}
+    assert set(recs) == {0, 1, 2}
+    assert all(r["outcome"] in OUTCOMES for r in recs.values())
+    # rid 1 (poisoned every pass) must end degraded on the oracle path
+    assert recs[1]["outcome"] == "degraded"
+    # rid 2 is untargeted: bit-identical to the fault-free run
+    if REF_BACKEND:
+        assert recs[2]["tokens"] == base[2]
+        assert recs[1]["tokens"] == base[1]   # oracle == parity baseline
+    assert eng.kv.page0_fingerprint() == fp0
+    assert eng.stats["fault_page_spikes"] == 1
+    assert eng.stats["fault_slow_steps"] == 1
+    assert eng.stats["transient_faults"] == 1
+    assert eng.stats["fault_kv_bit_flips"] == 1
+    _check_invariants(eng)
+
+
+def test_fault_plan_reset_rearms():
+    plan = FaultPlan([LogitPoison(rid=0, times=1),
+                      TransientFault(kind="decode", times=1)])
+    assert plan.take_transient("decode", None) is True
+    assert plan.take_transient("decode", None) is False
+    logits = np.zeros((4,), np.float32)
+    assert plan.poison("decode", 0, 0, logits) is not None
+    assert plan.poison("decode", 0, 1, logits) is None
+    plan.reset()
+    assert plan.take_transient("decode", None) is True
+    assert plan.poison("decode", 0, 0, logits) is not None
+
+
+def test_conservation_detects_double_free():
+    cfg = _cfg("packed")
+    eng = _engine(_params(cfg), cfg)
+    eng.kv.check_conservation()
+    eng.kv.free_pages.append(eng.kv.free_pages[-1])   # forge a dup
+    with pytest.raises(AssertionError):
+        eng.kv.check_conservation()

@@ -1,0 +1,273 @@
+"""Fault-tolerance suite: heartbeats/eviction, straggler detection,
+elastic re-mesh under shrinking host sets, crash-restart containment,
+and checkpoint-corruption detection + fallback.
+
+The controller/heartbeat tests moved here from test_substrate.py when
+PR 10 grew the FT surface; substrate keeps the training-loop and
+checkpoint-equality coverage.
+"""
+import json
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import (
+    CheckpointCorruptError, CheckpointManager, FaultToleranceController,
+    FTConfig, run_with_restarts,
+)
+
+
+# ---------------------------------------------------------------------------
+# controller: heartbeats / eviction / stragglers
+
+
+def test_ft_heartbeats_and_eviction():
+    ctl = FaultToleranceController(4, FTConfig(dead_after=2))
+    for h in range(4):
+        ctl.heartbeat(h, 1.0)
+    assert ctl.healthy() == [0, 1, 2, 3]
+    # host 2 stops beating
+    for _ in range(3):
+        for h in (0, 1, 3):
+            ctl.heartbeat(h, 1.0)
+        ctl.tick()
+    assert 2 not in ctl.healthy()
+    assert ctl.topology_changed([0, 1, 2, 3])
+
+
+def test_ft_straggler_detection():
+    ctl = FaultToleranceController(4, FTConfig(straggler_factor=2.0))
+    for _ in range(12):
+        for h in range(4):
+            ctl.heartbeat(h, 5.0 if h == 1 else 1.0)
+        ctl.tick()
+    assert 1 not in ctl.healthy()
+    assert 0 in ctl.healthy()
+
+
+def test_ft_straggler_recovery():
+    """A straggler that speeds back up (flaky link settles) rejoins the
+    healthy set once its EMA decays under the threshold."""
+    ctl = FaultToleranceController(4, FTConfig(straggler_factor=2.0,
+                                               ema=0.5))
+    for _ in range(10):
+        for h in range(4):
+            ctl.heartbeat(h, 8.0 if h == 1 else 1.0)
+        ctl.tick()
+    assert 1 not in ctl.healthy()
+    for _ in range(20):
+        for h in range(4):
+            ctl.heartbeat(h, 1.0)
+        ctl.tick()
+    assert 1 in ctl.healthy()
+
+
+def test_ft_heartbeat_revives_missed_count():
+    """Missed-beat aging resets on any heartbeat BEFORE eviction; a
+    host that skips dead_after-1 rounds then beats stays healthy."""
+    ctl = FaultToleranceController(2, FTConfig(dead_after=3))
+    for h in range(2):
+        ctl.heartbeat(h, 1.0)
+    for _ in range(3):          # host 1 silent for dead_after rounds...
+        ctl.heartbeat(0, 1.0)
+        ctl.tick()
+    assert 1 in ctl.healthy()   # ...but not yet PAST dead_after
+    ctl.heartbeat(1, 1.0)       # beats just in time
+    ctl.tick()
+    assert 1 in ctl.healthy()
+
+
+def test_ft_all_hosts_dead():
+    ctl = FaultToleranceController(2, FTConfig(dead_after=1))
+    for h in range(2):
+        ctl.heartbeat(h, 1.0)
+    for _ in range(3):
+        ctl.tick()
+    assert ctl.healthy() == []
+    with pytest.raises(RuntimeError):
+        ctl.propose_mesh(chips_per_host=64, model_axis=16)
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+
+
+def test_ft_elastic_mesh_proposal():
+    ctl = FaultToleranceController(8)
+    for h in range(8):
+        ctl.heartbeat(h, 1.0)
+    # lose 3 of 8 hosts (each 64 chips): 5*64 = 320 chips, model=16
+    for h in (5, 6, 7):
+        ctl.hosts[h].alive = False
+    pods, data, model = ctl.propose_mesh(chips_per_host=64, model_axis=16)
+    assert model == 16
+    assert pods * data * model <= 320
+    assert data & (data - 1) == 0  # power of two
+
+
+def test_ft_elastic_mesh_shrinking_sequence():
+    """Hosts die one by one; every proposal must fit the survivors,
+    keep the model axis intact, monotonically shrink, and bump the
+    generation each transition — until the fleet can no longer hold one
+    model shard, which must raise instead of proposing a broken mesh."""
+    ctl = FaultToleranceController(8)
+    for h in range(8):
+        ctl.heartbeat(h, 1.0)
+    prev_data = None
+    gens = []
+    for dead in range(0, 7):          # kill hosts 7,6,...,1 in turn
+        if dead:
+            ctl.hosts[8 - dead].alive = False
+        n_chips = len(ctl.healthy()) * 8
+        if n_chips < 8:
+            break
+        pods, data, model = ctl.propose_mesh(chips_per_host=8,
+                                             model_axis=8)
+        assert model == 8
+        assert pods * data * model <= n_chips
+        assert data & (data - 1) == 0
+        if prev_data is not None:
+            assert data <= prev_data
+        prev_data = data
+        gens.append(ctl.generation)
+    assert gens == sorted(gens) and len(set(gens)) == len(gens)
+    # one host of 4 chips left cannot hold an 8-wide model axis
+    for h in range(1, 8):
+        ctl.hosts[h].alive = False
+    with pytest.raises(RuntimeError):
+        ctl.propose_mesh(chips_per_host=4, model_axis=8)
+
+
+# ---------------------------------------------------------------------------
+# crash containment
+
+
+def test_run_with_restarts():
+    calls = []
+
+    def loop(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("simulated node failure")
+        return "done"
+
+    assert run_with_restarts(loop, max_restarts=3) == "done"
+    assert calls == [0, 1, 2]
+
+
+def test_run_with_restarts_exhaustion():
+    """A loop that never recovers re-raises after max_restarts+1
+    attempts — crashes are contained, not swallowed."""
+    calls = []
+
+    def loop(attempt):
+        calls.append(attempt)
+        raise RuntimeError("hard down")
+
+    with pytest.raises(RuntimeError, match="hard down"):
+        run_with_restarts(loop, max_restarts=2)
+    assert calls == [0, 1, 2]
+
+
+def test_run_with_restarts_non_runtime_error_propagates():
+    """Only RuntimeError (the simulated node-failure channel) restarts;
+    a programming error must fail fast on the first attempt."""
+    calls = []
+
+    def loop(attempt):
+        calls.append(attempt)
+        raise ValueError("bug, not a node failure")
+
+    with pytest.raises(ValueError):
+        run_with_restarts(loop, max_restarts=3)
+    assert calls == [0]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+
+
+def _save_steps(mgr, steps):
+    # x is deliberately KB-sized so corruption tests can flip bytes
+    # deep inside the array payload (not the zip/npy headers, which
+    # would make np.load itself fail rather than the checksum).
+    for s in steps:
+        mgr.save(s, {"x": jnp.ones((1024,)) * s, "y": jnp.zeros((3,))},
+                 extra={"data_index": s})
+
+
+TEMPLATE = {"x": jnp.zeros((1024,)), "y": jnp.zeros((3,))}
+
+
+def test_ckpt_manifest_has_checksums():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        _save_steps(mgr, [1])
+        with open(os.path.join(d, "step_1", "manifest.json")) as f:
+            manifest = json.load(f)
+        assert "arrays.npz" in manifest["files"]
+        assert len(manifest["files"]["arrays.npz"]) == 64  # sha256 hex
+        mgr.verify(1)  # intact checkpoint verifies clean
+
+
+def test_ckpt_corruption_detected_and_fallback():
+    """Flip bytes in the newest checkpoint: restore() must refuse it,
+    restore_latest() must fall back to the previous intact step."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=5, async_save=False)
+        _save_steps(mgr, [1, 2])
+        npz = os.path.join(d, "step_2", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.seek(2000)                   # inside x's array payload
+            f.write(b"\xde\xad\xbe\xef")
+        # the checksum fails CLEANLY before np.load would trip over the
+        # npz's own CRC with an obscure BadZipFile mid-restore
+        with pytest.raises(CheckpointCorruptError, match="checksum"):
+            mgr.restore(2, TEMPLATE)
+        res = mgr.restore_latest(TEMPLATE)
+        assert res is not None
+        tree, manifest, step = res
+        assert step == 1
+        assert manifest["extra"]["data_index"] == 1
+        np.testing.assert_array_equal(np.asarray(tree["x"]),
+                                      np.ones((1024,)))
+
+
+def test_ckpt_missing_file_detected():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        _save_steps(mgr, [1])
+        os.remove(os.path.join(d, "step_1", "arrays.npz"))
+        with pytest.raises(CheckpointCorruptError, match="missing"):
+            mgr.verify(1)
+
+
+def test_ckpt_all_corrupt_returns_none():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        _save_steps(mgr, [1])
+        with open(os.path.join(d, "step_1", "arrays.npz"), "r+b") as f:
+            f.seek(2000)
+            f.write(b"\x00\x00\x00\x01")
+        assert mgr.restore_latest(TEMPLATE) is None
+
+
+def test_ckpt_pre_checksum_manifest_still_restores():
+    """Manifests written before the integrity field verify trivially —
+    old checkpoints keep restoring."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        _save_steps(mgr, [1])
+        mpath = os.path.join(d, "step_1", "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        del manifest["files"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        tree, m = mgr.restore(1, TEMPLATE)
+        assert m["extra"]["data_index"] == 1
+        np.testing.assert_array_equal(np.asarray(tree["x"]),
+                                      np.ones((1024,)))

@@ -225,7 +225,7 @@ def test_check_finite_raises_on_overflow():
     params["lm_head"] = jnp.full_like(params["lm_head"], jnp.inf)
     eng = ServingEngine(params, cfg, max_slots=SLOTS, capacity=CAP,
                         page_size=PAGE, clock=VirtualClock(),
-                        check_finite=True)
+                        check_finite=True, on_nonfinite="raise")
     eng.submit([1, 2, 3], 4, 0.0)
     with pytest.raises(FloatingPointError):
         eng.run()

@@ -1,6 +1,7 @@
 """Substrate integration tests: training loop, checkpoint/restart equality,
-fault tolerance (heartbeats/stragglers/elastic), gradient compression,
-data-pipeline determinism, optimizer behaviour."""
+gradient compression, data-pipeline determinism, optimizer behaviour.
+(Fault-tolerance coverage — heartbeats/stragglers/elastic re-mesh/restarts
+and checkpoint integrity — lives in tests/test_ft.py.)"""
 import os
 import tempfile
 
@@ -14,8 +15,8 @@ from repro.configs.base import ModelConfig
 from repro.models import init_params
 from repro.optim import OptConfig, init_opt_state, apply_updates, schedule
 from repro.train import (
-    make_train_step, CheckpointManager, FaultToleranceController, FTConfig,
-    run_with_restarts, compress_decompress, init_compressor_state,
+    make_train_step, CheckpointManager, compress_decompress,
+    init_compressor_state,
 )
 from repro.data import DataConfig, DataState, SyntheticLM
 
@@ -80,56 +81,6 @@ def test_checkpoint_gc_and_latest():
             mgr.save(s, {"x": jnp.ones((4,)) * s})
         assert mgr.latest_step() == 4
         assert mgr.all_steps() == [3, 4]  # gc kept last 2
-
-
-def test_ft_heartbeats_and_eviction():
-    ctl = FaultToleranceController(4, FTConfig(dead_after=2))
-    for h in range(4):
-        ctl.heartbeat(h, 1.0)
-    assert ctl.healthy() == [0, 1, 2, 3]
-    # host 2 stops beating
-    for _ in range(3):
-        for h in (0, 1, 3):
-            ctl.heartbeat(h, 1.0)
-        ctl.tick()
-    assert 2 not in ctl.healthy()
-    assert ctl.topology_changed([0, 1, 2, 3])
-
-
-def test_ft_straggler_detection():
-    ctl = FaultToleranceController(4, FTConfig(straggler_factor=2.0))
-    for _ in range(12):
-        for h in range(4):
-            ctl.heartbeat(h, 5.0 if h == 1 else 1.0)
-        ctl.tick()
-    assert 1 not in ctl.healthy()
-    assert 0 in ctl.healthy()
-
-
-def test_ft_elastic_mesh_proposal():
-    ctl = FaultToleranceController(8)
-    for h in range(8):
-        ctl.heartbeat(h, 1.0)
-    # lose 3 of 8 hosts (each 64 chips): 5*64 = 320 chips, model=16
-    for h in (5, 6, 7):
-        ctl.hosts[h].alive = False
-    pods, data, model = ctl.propose_mesh(chips_per_host=64, model_axis=16)
-    assert model == 16
-    assert pods * data * model <= 320
-    assert data & (data - 1) == 0  # power of two
-
-
-def test_run_with_restarts():
-    calls = []
-
-    def loop(attempt):
-        calls.append(attempt)
-        if attempt < 2:
-            raise RuntimeError("simulated node failure")
-        return "done"
-
-    assert run_with_restarts(loop, max_restarts=3) == "done"
-    assert calls == [0, 1, 2]
 
 
 def test_compression_error_feedback_contraction():
